@@ -1,0 +1,32 @@
+"""Fig. 10 reproduction: latency breakdown + GPU comparison.
+
+(a) breakdown: periphery >92%, AIMC ~0.3%, SSA ~2.0%;
+(b) speedups vs RTX A2000 GPU reference points: 2.18x over ANN transformer,
+    6.85x over the GPU spiking transformer.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.energy import constants as C
+from repro.energy.model import Workload, latency_xpikeformer_ms
+
+
+def run(fast: bool = True):
+    w = Workload(depth=8, dim=768, tokens=196, T_xpike=7)
+    t0 = time.perf_counter()
+    lat = latency_xpikeformer_ms(w)
+    dt = (time.perf_counter() - t0) * 1e6
+    ann_gpu = C.GPU_ANN_VIT_8_768_MS
+    snn_gpu = ann_gpu * C.GPU_SNN_SLOWDOWN
+    rows = [
+        ("fig10a/breakdown", dt,
+         f"total={lat['total_ms']:.2f}ms periphery={lat['periphery_frac']:.3f} "
+         f"aimc={lat['aimc_frac']:.3f} ssa={lat['ssa_frac']:.3f} "
+         "(paper: 2.18ms, >0.92, 0.003, 0.020)"),
+        ("fig10b/speedups", dt,
+         f"vs_ANN_GPU={ann_gpu/lat['total_ms']:.2f}x (paper 2.18x) "
+         f"vs_SNN_GPU={snn_gpu/lat['total_ms']:.2f}x (paper 6.85x)"),
+    ]
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 8 reproduction: per-inference energy, 4 designs x model sizes.
+
+Asserts the paper's headline ratios on the ViT-8-768 ImageNet benchmark:
+ANN-Quant 9.6-13x, ANN-Quant+AIMC ~5.4-5.9x, SNN-Digi-Opt 1.8-1.9x the
+Xpikeformer energy (Table VI normalised task).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.energy.model import Workload, all_designs, total
+
+# (label, workload) — Table III / IV model sizes and converged T values
+CASES = [
+    ("vit-6-512", Workload(depth=6, dim=512, tokens=196, T_xpike=8, T_snn=6)),
+    ("vit-8-768", Workload(depth=8, dim=768, tokens=196, T_xpike=7, T_snn=4)),
+    ("gpt-4-256", Workload(depth=4, dim=256, tokens=37, T_xpike=11, T_snn=7, classes=256)),
+    ("gpt-8-512", Workload(depth=8, dim=512, tokens=37, T_xpike=5, T_snn=4, classes=256)),
+]
+
+
+def run(fast: bool = True):
+    rows = []
+    for label, w in CASES:
+        t0 = time.perf_counter()
+        d = all_designs(w)
+        tx = total(d["Xpikeformer"])
+        dt = (time.perf_counter() - t0) * 1e6
+        detail = " ".join(
+            f"{k.replace(' ', '')}={total(v)/1e9:.3f}mJ({total(v)/tx:.1f}x)"
+            for k, v in d.items()
+        )
+        rows.append((f"fig8/{label}", dt, detail))
+    return rows

@@ -1,0 +1,26 @@
+"""Fig. 9 reproduction: Xpikeformer computational-energy breakdown."""
+
+from __future__ import annotations
+
+import time
+
+from repro.energy.model import Workload, energy_xpikeformer
+
+
+def run(fast: bool = True):
+    w = Workload(depth=8, dim=768, tokens=196, T_xpike=7)
+    t0 = time.perf_counter()
+    e = energy_xpikeformer(w)
+    dt = (time.perf_counter() - t0) * 1e6
+    tc = e["compute"]
+    aimc = sum(e["aimc_breakdown"].values())
+    ab = e["aimc_breakdown"]
+    rows = [
+        ("fig9/compute_split", dt,
+         f"aimc={aimc/tc:.3f} ssa={e['ssa']/tc:.3f} other={e['other']/tc:.3f} "
+         "(paper: 0.784/0.189/0.027)"),
+        ("fig9/aimc_split", dt,
+         f"periphery={ab['periphery']/aimc:.3f} accum={ab['accum']/aimc:.3f} "
+         f"adc={ab['adc']/aimc:.3f} (paper: 0.859/0.121/0.020)"),
+    ]
+    return rows

@@ -1,0 +1,41 @@
+"""Kernel microbenchmarks (interpret mode on CPU = correctness-path timing;
+real TPU timing is out of scope for this container — see §Roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    t, b, h, n, d = 2, 1, 2, 64, 32
+    q = jax.random.bernoulli(key, 0.3, (t, b, h, n, d)).astype(jnp.uint8)
+    us = _time(ops.ssa_attention_packed, q, q, q, key, causal=False, interpret=True)
+    rows.append(("kernels/ssa_attention_packed", us, f"shape=T{t}B{b}H{h}N{n}D{d}"))
+
+    cur = jax.random.normal(key, (8, 4096))
+    us = _time(ops.lif_fused, cur, interpret=True)
+    rows.append(("kernels/lif_fused", us, "shape=8x4096"))
+
+    sp = jax.random.bernoulli(key, 0.3, (4, 32, 256)).astype(jnp.float32)
+    w = jax.random.randint(key, (256, 256), -15, 16, jnp.int8)
+    sc = jnp.full((256,), 0.05, jnp.float32)
+    us = _time(ops.aimc_spiking_linear, sp, w, sc, interpret=True)
+    rows.append(("kernels/aimc_spiking_linear", us, "shape=4x32x256->256"))
+    return rows

@@ -1,0 +1,92 @@
+"""Roofline report: reads experiments/dryrun/*.json into the §Roofline table.
+
+Per (arch x shape) single-pod cell: the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and per-device memory.  Also emits a
+markdown table for EXPERIMENTS.md (``python -m benchmarks.roofline --md``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "single", variant: str = "base"):
+    out = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != mesh and "skipped" not in rec:
+            continue
+        if "skipped" in rec:
+            if p.stem.endswith(f"__{mesh}"):
+                out.append(rec)
+            continue
+        if rec.get("variant", "base") != variant:
+            continue
+        out.append(rec)
+    return out
+
+
+def fmt_row(rec) -> str:
+    if "skipped" in rec:
+        return f"{rec['cell']:45s} SKIP ({rec['skipped'][:60]})"
+    t = {k: max(v, 0.0) for k, v in rec["roofline_terms_s"].items()}
+    mem = rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+    return (
+        f"{rec['cell']:45s} comp={t['compute_s']:.4f}s mem={t['memory_s']:.4f}s "
+        f"coll={t['collective_s']:.4f}s dom={rec['bottleneck'][:-2]:10s} "
+        f"useful={rec['useful_flops_ratio']:.2f} temp={mem:.1f}GiB"
+    )
+
+
+def markdown_table(mesh: str = "single", variant: str = "base") -> str:
+    lines = [
+        "| cell | compute (s) | memory (s) | collective (s) | bottleneck | "
+        "MODEL/HLO flops | step (s) | temp GiB | mode |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh, variant):
+        if "skipped" in rec:
+            lines.append(f"| {rec['cell']} | — | — | — | SKIP: {rec['skipped'][:70]} | | | | |")
+            continue
+        t = {k: max(v, 0.0) for k, v in rec["roofline_terms_s"].items()}
+        mem = rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {rec['cell']} | {t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | {rec['bottleneck'][:-2]} | "
+            f"{rec['useful_flops_ratio']:.2f} | {rec['roofline_step_time_s']:.4f} | "
+            f"{mem:.1f} | {rec['mode']} |"
+        )
+    return "\n".join(lines)
+
+
+def run(fast: bool = True):
+    t0 = time.perf_counter()
+    cells = load_cells()
+    dt = (time.perf_counter() - t0) * 1e6
+    done = [c for c in cells if "skipped" not in c]
+    skipped = [c for c in cells if "skipped" in c]
+    by_dom = {}
+    for c in done:
+        by_dom[c["bottleneck"]] = by_dom.get(c["bottleneck"], 0) + 1
+    rows = [("roofline/summary", dt,
+             f"cells={len(done)} skipped={len(skipped)} bottlenecks={by_dom}")]
+    for c in done:
+        t = c["roofline_terms_s"]
+        rows.append((f"roofline/{c['cell']}", dt,
+                     f"dom={c['bottleneck'][:-2]} step={c['roofline_step_time_s']:.4f}s "
+                     f"useful={c['useful_flops_ratio']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--md" in sys.argv:
+        print(markdown_table())
+    else:
+        for rec in load_cells():
+            print(fmt_row(rec))

@@ -1,0 +1,45 @@
+"""SSA rate convergence (paper §IV-B, Eq. 6).
+
+As the spike-encoding length T grows, the firing rate of
+``BNL(BNL(Q^t K^t^T) V^t)`` converges to the deterministic rate product
+``clip((Q K^T / d) V / N)``.  Reports mean |rate - expected| vs T — the
+empirical error should fall ~ 1/sqrt(T).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spikes as SP
+from repro.core import ssa as SSA
+
+
+def run(fast: bool = True):
+    key = jax.random.PRNGKey(0)
+    b, h, n, d = (2, 2, 32, 32) if fast else (4, 4, 64, 64)
+    kq, kk, kv, ke = jax.random.split(key, 4)
+    q_rate = jax.random.uniform(kq, (b, h, n, d))
+    k_rate = jax.random.uniform(kk, (b, h, n, d))
+    v_rate = jax.random.uniform(kv, (b, h, n, d))
+    expected = SSA.ssa_attention_rate(q_rate, k_rate, v_rate)
+
+    rows = []
+    ts = (2, 4, 8, 16, 32) if fast else (2, 4, 8, 16, 32, 64, 128)
+    for T in ts:
+        kt = jax.random.fold_in(ke, T)
+        ks = jax.random.split(kt, 4)
+        q = SP.rate_encode(ks[0], q_rate, T, straight_through=False)
+        k = SP.rate_encode(ks[1], k_rate, T, straight_through=False)
+        v = SP.rate_encode(ks[2], v_rate, T, straight_through=False)
+        t0 = time.perf_counter()
+        out = SSA.ssa_attention_integer(ks[3], q.astype(jnp.int32), k.astype(jnp.int32),
+                                        v.astype(jnp.int32))
+        out = jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.mean(jnp.abs(jnp.mean(out.astype(jnp.float32), 0) - expected)))
+        rows.append((f"ssa_convergence/T={T}", dt, f"mae={err:.4f}"))
+    # convergence check: error at largest T must beat error at smallest T
+    return rows

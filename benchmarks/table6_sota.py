@@ -1,0 +1,32 @@
+"""Table VI reproduction: comparison with SOTA accelerators.
+
+SwiftTron [34] and X-Former [24] rows use the paper's reported numbers
+(they are external chips); the Xpikeformer row is produced by OUR model —
+the reproduction claim is that our analytical pipeline lands on the
+paper's reported 0.30 mJ / 2.18 ms / 784 mm^2.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.energy.model import Workload, area_xpikeformer_mm2, energy_xpikeformer, \
+    latency_xpikeformer_ms, total
+
+
+def run(fast: bool = True):
+    w = Workload(depth=8, dim=768, tokens=196, T_xpike=7)
+    t0 = time.perf_counter()
+    e = total(energy_xpikeformer(w)) / 1e9
+    lat = latency_xpikeformer_ms(w)["total_ms"]
+    params = 8 * (4 * 768 * 768 + 8 * 768 * 768) + 768 * 1000
+    area = area_xpikeformer_mm2(w, params)["total_mm2"]
+    dt = (time.perf_counter() - t0) * 1e6
+    rows = [
+        ("table6/swifttron[34]", dt, "energy=3.97mJ latency=2.26ms area=273mm2 (reported)"),
+        ("table6/x-former[24]", dt, "energy=2.04mJ latency=4.13ms area=n/a (reported)"),
+        ("table6/xpikeformer(ours)", dt,
+         f"energy={e:.2f}mJ latency={lat:.2f}ms area={area:.0f}mm2 "
+         "(paper: 0.30mJ 2.18ms 784mm2)"),
+    ]
+    return rows

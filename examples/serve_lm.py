@@ -1,0 +1,24 @@
+"""Batched serving example: continuous-batching decode over any --arch.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b --requests 6
+"""
+
+import argparse
+
+from repro.configs.registry import list_archs
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+    serve(args.arch, n_requests=args.requests, slots=args.slots,
+          max_new=args.max_new)
+
+
+if __name__ == "__main__":
+    main()

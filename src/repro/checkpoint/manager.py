@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: atomic, async, retention, elastic restore.
+
+Layout:  <dir>/step_<k>/            (atomic: written as .tmp then renamed)
+            manifest.json           tree structure, shapes, dtypes, step
+            leaf_00000.npy ...      one file per leaf (ml_dtypes handles
+                                    bfloat16 round-trip)
+         <dir>/LATEST               text file with the newest step
+
+Design points for 1000+-node runs:
+
+* **Atomicity** — a crash mid-write never corrupts a restorable state: the
+  rename is the commit point, LATEST is updated after.
+* **Async** — ``save()`` device_get's the state (cheap, snapshots values)
+  and hands serialisation to a background thread; the train loop keeps
+  stepping.  ``wait()`` joins before exit.
+* **Elastic restore** — leaves are saved *unsharded* (gathered); restore
+  ``device_put``s them with the **target** mesh's shardings, so restoring
+  onto a different mesh shape (scale up/down) or a different parallelism
+  layout needs no conversion step.  ``launch/elastic.py`` computes the new
+  spec tree.
+* **Retention** — keep the newest ``keep`` checkpoints, delete older ones
+  only after a successful commit (never delete the last good state).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Array = jax.Array
+
+_NATIVE_KINDS = set("biufc")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        dt = np.dtype(name)
+        if dt.kind in _NATIVE_KINDS:
+            return dt
+    except TypeError:
+        pass
+    return np.dtype(getattr(ml_dtypes, name))  # bfloat16, float8_*, ...
+
+
+def _save_leaf(path: Path, arr: np.ndarray) -> None:
+    if arr.dtype.kind in _NATIVE_KINDS:
+        np.save(path, arr, allow_pickle=False)
+    else:  # ml_dtypes custom dtype: store raw bytes, dtype lives in manifest
+        np.save(path, np.frombuffer(arr.tobytes(), np.uint8), allow_pickle=False)
+
+
+def _load_leaf(path: Path, shape, dtype_name: str) -> np.ndarray:
+    raw = np.load(path, allow_pickle=False)
+    dt = _np_dtype(dtype_name)
+    if raw.dtype == np.uint8 and dt.kind not in _NATIVE_KINDS:
+        return raw.view(dt).reshape(shape)
+    return raw
+
+
+def _tree_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(p), v) for p, v in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state, *, blocking: bool = False) -> None:
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self.wait()
+        t = threading.Thread(target=self._write, args=(step, host_state), daemon=True)
+        t.start()
+        self._thread = t
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state) -> None:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves, treedef = jax.tree.flatten(host_state)
+        manifest = {
+            "step": step,
+            "treedef": jax.tree_util.tree_structure(host_state).serialize_using_proto().hex(),
+            "leaves": [],
+        }
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            _save_leaf(tmp / f"leaf_{i:05d}.npy", arr)
+            manifest["leaves"].append({"shape": list(arr.shape), "dtype": str(arr.dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # commit point
+        (self.dir / "LATEST").write_text(str(step))
+        self._gc(step)
+
+    def _gc(self, newest: int) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            if s != newest:
+                shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def steps(self) -> List[int]:
+        return [
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if (p / "manifest.json").exists()
+        ]
+
+    def latest_step(self) -> Optional[int]:
+        marker = self.dir / "LATEST"
+        if marker.exists():
+            s = int(marker.read_text().strip())
+            if (self.dir / f"step_{s:08d}" / "manifest.json").exists():
+                return s
+        steps = self.steps()
+        return max(steps) if steps else None
+
+    def restore(self, state_like, *, step: Optional[int] = None, shardings=None):
+        """Restore into the structure of ``state_like``; if ``shardings`` is
+        given (pytree of NamedSharding, possibly for a NEW mesh), leaves are
+        device_put with it — this is the elastic-resharding path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        src = self.dir / f"step_{step:08d}"
+        manifest = json.loads((src / "manifest.json").read_text())
+        _, treedef = jax.tree.flatten(state_like)
+        leaves = []
+        for i, meta in enumerate(manifest["leaves"]):
+            leaves.append(
+                _load_leaf(src / f"leaf_{i:05d}.npy", tuple(meta["shape"]), meta["dtype"])
+            )
+        state = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+                state,
+                shardings,
+            )
+        else:
+            state = jax.tree.map(jax.device_put, state)
+        return state, step

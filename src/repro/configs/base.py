@@ -1,0 +1,196 @@
+"""Config dataclasses: model architecture, run shapes, parallelism.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`; every
+(arch x input-shape) dry-run / roofline cell is a :class:`RunConfig`.
+Configs are frozen dataclasses so they hash and can key jit caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model architecture
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for the generic LM stack.
+
+    ``block_pattern`` is cycled over the depth: each entry names the token
+    mixer of one layer — ``attn`` (global attention), ``local`` (sliding
+    window), ``rglru`` (RecurrentGemma RG-LRU), ``ssd`` (Mamba-2 state-space
+    duality).  The pattern period is the scan unit: layers are scanned over
+    ``num_layers // len(pattern)`` periods with the remainder unrolled.
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- token mixer pattern ---
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window_size: int = 1024  # for "local" mixers
+    qkv_bias: bool = False
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+
+    # --- MoE ---
+    num_experts: int = 0
+    moe_top_k: int = 0
+    moe_dense_ff: int = 0  # arctic-style dense residual MLP alongside MoE
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba-2 / SSD) ---
+    ssm_state_dim: int = 0
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 256
+
+    # --- hybrid (RecurrentGemma RG-LRU) ---
+    rglru_width: int = 0  # 0 -> d_model
+    rglru_conv_width: int = 4
+
+    # --- misc architecture ---
+    rope_theta: float = 10000.0
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "silu"  # silu | gelu
+    gated_mlp: bool = True
+    tie_embeddings: bool = False
+
+    # --- the paper's technique (spiking mode) ---
+    spiking: bool = False
+    spike_T: int = 4
+    attention_kind: str = "softmax"  # softmax | ssa | lif  (spiking modes)
+
+    # --- modality frontend stub ---
+    frontend: str = "none"  # none | audio_frames | vision_patches
+    frontend_dim: int = 0  # embedding dim delivered by the (stub) frontend
+
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def num_periods(self) -> int:
+        return self.num_layers // self.period
+
+    @property
+    def remainder_layers(self) -> int:
+        return self.num_layers % self.period
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(b in ("ssd",) for b in self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no mixer needs a full O(L^2) global KV cache at decode."""
+        return all(b in ("ssd", "rglru", "local") for b in self.block_pattern)
+
+    def mixer_of_layer(self, i: int) -> str:
+        return self.block_pattern[i % self.period]
+
+    def validate(self) -> "ModelConfig":
+        assert self.d_model > 0 and self.num_layers > 0
+        if self.num_heads:
+            assert self.num_heads % max(self.num_kv_heads, 1) == 0, (
+                f"{self.name}: heads {self.num_heads} not a multiple of kv "
+                f"heads {self.num_kv_heads}"
+            )
+        if self.is_moe:
+            assert self.moe_top_k > 0
+        if "ssd" in self.block_pattern:
+            assert self.ssm_state_dim > 0
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned LM shape grid)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a shape cell is runnable for an arch (per DESIGN.md skip rules).
+
+    ``long_500k`` runs for archs with a sub-quadratic decode path — SSM,
+    hybrid, and local-window-dominated stacks (gemma3's 5:1 interleave makes
+    decode near-linear).  Pure full-attention archs skip it.
+    """
+    if shape.name == "long_500k":
+        if all(m == "attn" for m in model.block_pattern):
+            return False, "long_500k skipped: pure full-attention arch (no sub-quadratic path)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / run configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How a run is laid out on the mesh.
+
+    Axis names follow ``launch/mesh.py``: ``pod`` (inter-pod DP), ``data``
+    (intra-pod DP / FSDP), ``model`` (TP / SP / EP).
+    """
+
+    fsdp: bool = True  # shard param minor dims over "data" (ZeRO-3 style)
+    seq_shard: bool = True  # sequence-parallel activations over "model"
+    pure_dp: bool = False  # small models: replicate weights, batch over ALL axes
+    remat: str = "block"  # none | block | full
+    opt_state_dtype: str = "float32"  # float32 | bfloat16 | int8
+    grad_compression: bool = False  # int8 error-feedback all-reduce
+    grad_dtype: str = "native"  # native | bfloat16 (cast before cross-chip reduce)
+    microbatches: int = 1  # gradient accumulation steps
+    moe_impl: str = "ep_a2a"  # ep_a2a | dense
+    param_dtype: str = "bfloat16"
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig = ParallelConfig()
+
+    @property
+    def cell(self) -> str:
+        return f"{self.model.name}:{self.shape.name}"

@@ -1,0 +1,37 @@
+"""Xpikeformer paper-scale configs (Tables III & IV).
+
+* ViT encoders 4-384 / 6-512 / 8-768 (image classification) — built by
+  ``core/spiking_transformer.py`` (encoder, patch embed, CLS pooling).
+* GPT decoders 4-256 / 8-512 (ICL wireless symbol detection) — expressed on
+  the generic LM stack with ``spiking=True`` and SSA attention, which is
+  exactly Table I's Xpikeformer column.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def xpikeformer_gpt(depth: int, dim: int, *, vocab: int, T: int = 4, spiking: bool = True,
+                    attention_kind: str = "ssa") -> ModelConfig:
+    return ModelConfig(
+        name=f"xpikeformer-gpt-{depth}-{dim}",
+        family="dense",
+        num_layers=depth,
+        d_model=dim,
+        num_heads=max(dim // 64, 1),
+        num_kv_heads=max(dim // 64, 1),
+        head_dim=64,
+        d_ff=4 * dim,
+        vocab_size=vocab,
+        norm_type="layernorm",
+        act="gelu",
+        gated_mlp=False,
+        spiking=spiking,
+        spike_T=T,
+        attention_kind=attention_kind,
+        rope_theta=10000.0,
+        dtype="float32",
+    ).validate()
+
+
+GPT_4_256 = xpikeformer_gpt(4, 256, vocab=64)
+GPT_8_512 = xpikeformer_gpt(8, 512, vocab=64)

@@ -1,0 +1,207 @@
+"""Analog in-memory computing (AIMC) simulation — PCM crossbars, Table II.
+
+A from-scratch JAX equivalent of the AIHWKit pieces the paper uses:
+
+* 5-bit effective weights from differential pairs of 4-bit-conductance PCM
+  devices (Table II), per-column scaling;
+* 128x128 crossbar tiles with the *row-block-wise mapping* of §IV-A-2:
+  the input dim is cut into 128-row blocks, each block's column partial
+  sums pass through a (shared, 5-bit) ADC, and the digitized partial sums
+  are accumulated *digitally* in the LIF unit's carry-save adder — the
+  non-binary pre-activation never goes to memory;
+* programming noise, read noise, and conductance drift
+  ``G(t) = G0 * (t/t0)^-nu`` with per-device drift exponents
+  (Joshi et al., Nat. Comm. 2020);
+* global drift compensation (GDC, §V-B): a calibration input read through
+  the crossbar at time t rescales outputs by sum G(t0) / sum G(t);
+* hardware-aware training (HWAT, §V-A): the forward pass applies
+  quantisation + programming noise with a straight-through gradient, the
+  backward pass stays ideal.
+
+Everything operates on *float weights + simulation config*; the hardware
+state (programmed conductance offsets, drift exponents) is sampled from a
+key so experiments are reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AIMCConfig:
+    # Table II
+    conductance_bits: int = 4  # per PCM device
+    weight_bits: int = 5  # differential pair => ~5-bit effective weight
+    crossbar_rows: int = 128
+    crossbar_cols: int = 128
+    adc_bits: int = 5
+    adc_sharing: int = 8
+    # non-idealities (relative to per-column g_max)
+    prog_noise_sigma: float = 0.03
+    read_noise_sigma: float = 0.015
+    # PCM drift (Joshi et al. 2020): nu ~ N(0.06, 0.02), t0 = 20 s
+    drift_nu_mean: float = 0.06
+    drift_nu_sigma: float = 0.02
+    drift_t0_s: float = 20.0
+    # ADC full-scale: multiple of g_max (expected partial-sum amplitude)
+    adc_fullscale_rows: float = 8.0
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (self.weight_bits - 1) - 1  # +/-15 for 5-bit differential
+
+
+# ---------------------------------------------------------------------------
+# Weight quantisation (per-column scale)
+# ---------------------------------------------------------------------------
+
+
+def column_scale(w: Array, cfg: AIMCConfig) -> Array:
+    """Per-output-column scale: g_max maps to max |w| in the column."""
+    amax = jnp.max(jnp.abs(w), axis=0)
+    return jnp.where(amax > 0, amax / cfg.levels, 1.0)
+
+
+def quantize_levels(w: Array, scale: Array, cfg: AIMCConfig) -> Array:
+    """Signed integer conductance-pair levels in [-levels, levels]."""
+    return jnp.clip(jnp.round(w / scale), -cfg.levels, cfg.levels)
+
+
+@jax.custom_vjp
+def _ste(w: Array, w_eff: Array) -> Array:
+    return w_eff
+
+
+def _ste_fwd(w, w_eff):
+    return w_eff, None
+
+
+def _ste_bwd(_, g):
+    return (g, None)  # gradient flows to the ideal float weight
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Hardware state: programming + drift
+# ---------------------------------------------------------------------------
+
+
+def program_weights(key: Array, w: Array, cfg: AIMCConfig) -> Dict[str, Array]:
+    """Program float weights onto PCM: quantise + programming noise.
+
+    Returns the persistent "hardware state" for inference:
+      levels  — ideal integer levels
+      eps     — programming error (in level units), frozen at program time
+      nu      — per-device drift exponent
+      scale   — per-column float scale
+    """
+    k1, k2 = jax.random.split(key)
+    scale = column_scale(w, cfg)
+    levels = quantize_levels(w, scale, cfg)
+    eps = cfg.prog_noise_sigma * cfg.levels * jax.random.normal(k1, w.shape, jnp.float32)
+    nu = cfg.drift_nu_mean + cfg.drift_nu_sigma * jax.random.normal(k2, w.shape, jnp.float32)
+    nu = jnp.maximum(nu, 0.0)
+    return {"levels": levels, "eps": eps, "nu": nu, "scale": scale}
+
+
+def drift_factor(nu: Array, t_seconds: float, cfg: AIMCConfig) -> Array:
+    t = max(float(t_seconds), cfg.drift_t0_s)
+    return jnp.power(t / cfg.drift_t0_s, -nu)
+
+
+def effective_weights(hw: Dict[str, Array], t_seconds: float, cfg: AIMCConfig) -> Array:
+    """Conductance levels at inference time t (drifted, programming error)."""
+    g = (hw["levels"] + hw["eps"]) * drift_factor(hw["nu"], t_seconds, cfg)
+    return g  # in level units; multiply by scale to get weight units
+
+
+def gdc_factor(hw: Dict[str, Array], t_seconds: float, cfg: AIMCConfig) -> Array:
+    """Global drift compensation (§V-B): ratio of calibration column sums.
+
+    Hardware reads |G| column sums with a known input; we reproduce that
+    with the summed absolute conductance at t0 vs t (a per-tensor scalar —
+    'global' compensation, not per-device)."""
+    g0 = jnp.sum(jnp.abs(hw["levels"] + hw["eps"]))
+    gt = jnp.sum(jnp.abs(effective_weights(hw, t_seconds, cfg)))
+    return g0 / jnp.maximum(gt, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Crossbar MVM with row-block-wise mapping + ADC
+# ---------------------------------------------------------------------------
+
+
+def _adc(x: Array, cfg: AIMCConfig) -> Array:
+    """Shared 5-bit ADC on column partial sums (per 128-row block).
+
+    Full scale is +/- adc_fullscale_rows (in g_max units); quantises to
+    2^adc_bits uniform levels with straight-through gradient."""
+    fs = cfg.adc_fullscale_rows * cfg.levels
+    step = 2.0 * fs / (2 ** cfg.adc_bits - 1)
+    q = jnp.clip(jnp.round(x / step), -(2 ** (cfg.adc_bits - 1)), 2 ** (cfg.adc_bits - 1) - 1)
+    return _ste(x, q * step)
+
+
+def aimc_matmul(
+    key: Optional[Array],
+    x: Array,
+    hw: Dict[str, Array],
+    cfg: AIMCConfig,
+    *,
+    t_seconds: float = 0.0,
+    gdc: bool = True,
+) -> Array:
+    """x [..., d_in] @ W [d_in, d_out] through the simulated crossbars.
+
+    Row-block-wise mapping: d_in is cut into 128-row blocks; each block's
+    column currents get read noise + ADC quantisation, then the digitized
+    partial sums accumulate exactly (CSA in the LIF unit)."""
+    d_in, d_out = hw["levels"].shape
+    g = effective_weights(hw, t_seconds, cfg)  # level units
+    rows = cfg.crossbar_rows
+    pad = (-d_in) % rows
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        g = jnp.pad(g, [(0, pad), (0, 0)])
+    nb = g.shape[0] // rows
+    xb = x.reshape(*x.shape[:-1], nb, rows)
+    gb = g.reshape(nb, rows, d_out)
+    partial = jnp.einsum("...br,brd->...bd", xb.astype(jnp.float32), gb)
+    if key is not None and cfg.read_noise_sigma > 0:
+        noise = cfg.read_noise_sigma * cfg.levels * jax.random.normal(
+            key, partial.shape, jnp.float32
+        )
+        partial = partial + noise
+    partial = _adc(partial, cfg)
+    out = jnp.sum(partial, axis=-2)  # exact digital accumulation (CSA)
+    out = out * hw["scale"]
+    if gdc and t_seconds > 0:
+        out = out * gdc_factor(hw, t_seconds, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HWAT: noisy forward with ideal backward (training-time simulation)
+# ---------------------------------------------------------------------------
+
+
+def hwat_weights(key: Array, w: Array, cfg: AIMCConfig) -> Array:
+    """Quantise + inject programming noise, straight-through gradient."""
+    scale = column_scale(w, cfg)
+    levels = quantize_levels(w, scale, cfg)
+    noise = cfg.prog_noise_sigma * cfg.levels * jax.random.normal(key, w.shape, jnp.float32)
+    w_eff = (levels + noise) * scale
+    return _ste(w, w_eff.astype(w.dtype))
+
+
+def ideal_matmul(x: Array, w: Array) -> Array:
+    return x @ w

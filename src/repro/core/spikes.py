@@ -1,0 +1,231 @@
+"""Spike encoding, spiking neurons, and surrogate gradients.
+
+This module is the numerical foundation of the Xpikeformer reproduction:
+
+* Bernoulli rate coding (paper Eq. (1)) — maps real activations in [0, 1]
+  onto binary spike trains of length T.
+* The LIF neuron (paper Eqs. (2)-(3)) — leaky integrate-and-fire with a
+  hardware-faithful leak of beta = 0.5 (a right shift of the membrane
+  register) and reset-to-zero on fire.
+* The Bernoulli neuron layer (BNL, paper §IV-B) — the *stateless* neuron
+  that replaces LIF inside stochastic spiking attention.  Its hardware form
+  compares an **unnormalised integer** against a uniform random integer in
+  (0, I_max]; we reproduce that comparison bit-faithfully rather than
+  sampling from a float probability.
+* Surrogate gradients — fast-sigmoid for the Heaviside spike function and
+  a straight-through estimator for the Bernoulli samplers, so the whole
+  spiking transformer trains with ordinary reverse-mode AD (the paper's
+  SpikingJelly setup does the same).
+
+Everything is pure-functional JAX: spike trains carry a leading time axis
+``[T, ...]`` and the LIF state is threaded through ``jax.lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Surrogate gradients
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def heaviside_st(v: Array, alpha: float = 2.0) -> Array:
+    """Heaviside step with fast-sigmoid surrogate gradient.
+
+    Forward: 1.0 where v >= 0 else 0.0.
+    Backward: grad * 1 / (1 + alpha*|v|)^2  (SpikingJelly's ATan-like fast
+    sigmoid; alpha controls surrogate sharpness).
+    """
+    del alpha
+    return (v >= 0.0).astype(v.dtype)
+
+
+def _heaviside_fwd(v, alpha):
+    return heaviside_st(v, alpha), (v, alpha)
+
+
+def _heaviside_bwd(res, g):
+    v, alpha = res
+    surr = 1.0 / (1.0 + alpha * jnp.abs(v)) ** 2
+    return (g * surr, None)
+
+
+heaviside_st.defvjp(_heaviside_fwd, _heaviside_bwd)
+
+
+@jax.custom_vjp
+def bernoulli_st(p: Array, u: Array) -> Array:
+    """Straight-through Bernoulli: forward samples (p > u), backward is id.
+
+    ``u`` is uniform in [0, 1) and treated as a constant.  The straight-
+    through estimator passes the gradient to the probability, which matches
+    the training recipe for Bernoulli neurons (the expectation of the sample
+    is exactly p, so d E[s]/d p = 1).
+    """
+    return (u < p).astype(p.dtype)
+
+
+def _bern_fwd(p, u):
+    return bernoulli_st(p, u), None
+
+
+def _bern_bwd(_, g):
+    return (g, None)
+
+
+bernoulli_st.defvjp(_bern_fwd, _bern_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Bernoulli rate coding (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def rate_encode(key: Array, x: Array, T: int, *, straight_through: bool = True) -> Array:
+    """Encode real values ``x`` in [0, 1] into spike trains ``s[t]``.
+
+    Returns an array of shape ``(T,) + x.shape`` with values in {0, 1}
+    (same dtype as x so gradients flow via the ST estimator).
+    """
+    x = jnp.clip(x, 0.0, 1.0)
+    u = jax.random.uniform(key, (T,) + x.shape, dtype=x.dtype)
+    if straight_through:
+        return bernoulli_st(jnp.broadcast_to(x, u.shape), u)
+    return (u < x).astype(x.dtype)
+
+
+def rate_decode(spikes: Array) -> Array:
+    """Decode a spike train by its firing rate (mean over leading T axis)."""
+    return jnp.mean(spikes, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# LIF neuron (Eqs. 2-3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """LIF neuron hyper-parameters.
+
+    beta = 0.5 corresponds to the hardware shift-register leak (a one-bit
+    right shift of the membrane potential per timestep, §IV-A-2).
+    """
+
+    beta: float = 0.5
+    v_thresh: float = 1.0
+    surrogate_alpha: float = 2.0
+
+
+def lif_step(v: Array, i_t: Array, p: LIFParams) -> Tuple[Array, Array]:
+    """One LIF update. Returns (new membrane, output spikes)."""
+    v = p.beta * v + i_t
+    s = heaviside_st(v - p.v_thresh, p.surrogate_alpha)
+    v = v * (1.0 - s)  # reset-to-zero on fire
+    return v, s
+
+
+def lif(currents: Array, p: LIFParams = LIFParams(), v0: Optional[Array] = None) -> Array:
+    """Run an LIF neuron over a ``[T, ...]`` current sequence via lax.scan.
+
+    Returns the ``[T, ...]`` binary spike outputs.
+    """
+    if v0 is None:
+        v0 = jnp.zeros(currents.shape[1:], currents.dtype)
+
+    def step(v, i_t):
+        v, s = lif_step(v, i_t, p)
+        return v, s
+
+    _, spikes = lax.scan(step, v0, currents)
+    return spikes
+
+
+# ---------------------------------------------------------------------------
+# Bernoulli neuron layer (BNL) — hardware-faithful integer comparison
+# ---------------------------------------------------------------------------
+
+
+def split_prn_bytes(word32: Array) -> Array:
+    """Tap all four bytes of a 32-bit PRN word (paper §IV-B-3, [48][49]).
+
+    The SSA engine maximises LFSR utilisation by using every byte of each
+    32-bit LFSR word as an independent 8-bit PRN.  Given uint32 ``word32``
+    of shape S this returns a uint8 array of shape S + (4,).
+    """
+    w = word32.astype(jnp.uint32)
+    return jnp.stack(
+        [
+            (w & 0xFF).astype(jnp.uint8),
+            ((w >> 8) & 0xFF).astype(jnp.uint8),
+            ((w >> 16) & 0xFF).astype(jnp.uint8),
+            ((w >> 24) & 0xFF).astype(jnp.uint8),
+        ],
+        axis=-1,
+    )
+
+
+def bnl_integer(key: Array, counts: Array, i_max: int) -> Array:
+    """Hardware Bernoulli encoder: spike iff ``count > r`` with r ~ U{0..i_max-1}.
+
+    ``counts`` are unnormalised integer accumulator values in [0, i_max]
+    (e.g. the popcount of d_K AND results).  The hardware comparator fires
+    when the input integer exceeds a uniform random integer drawn from
+    (0, I_max]; with I_max a power of two the PRN is simply the low
+    log2(I_max) bits of an LFSR word.  P(spike) = count / i_max exactly.
+    Returns float spikes in {0,1} with gradient d s / d count = 1/i_max
+    (straight-through through the comparison).
+    """
+    r = jax.random.randint(key, counts.shape, 0, i_max, dtype=jnp.int32)
+    p = counts.astype(jnp.float32) / float(i_max)
+    u = (r.astype(jnp.float32) + 0.0) / float(i_max)
+    # (u < p) == (r < count) == (count > r): identical sample path to the
+    # hardware comparator, while bernoulli_st provides the ST gradient.
+    return bernoulli_st(p, u)
+
+
+def bnl(key: Array, x: Array, scale: float) -> Array:
+    """Float-input Bernoulli neuron layer: normalise by ``scale`` then sample."""
+    p = jnp.clip(x / scale, 0.0, 1.0)
+    u = jax.random.uniform(key, x.shape, dtype=p.dtype)
+    return bernoulli_st(p, u)
+
+
+# ---------------------------------------------------------------------------
+# Spiking linear layer (AIMC-executed in hardware)
+# ---------------------------------------------------------------------------
+
+
+def spiking_linear(
+    spikes: Array,
+    w: Array,
+    b: Optional[Array],
+    p: LIFParams = LIFParams(),
+) -> Array:
+    """``LIF(W s^t + b)`` over a ``[T, ..., d_in]`` spike train.
+
+    This is the reference (ideal, noise-free) semantics of one AIMC
+    spiking-neuron tile: the crossbar computes the MVM per timestep and the
+    LIF unit integrates it, with membrane state carried across timesteps —
+    never materialising the T non-binary pre-activations in memory (the scan
+    carry is the membrane register).
+    """
+
+    def step(v, s_t):
+        i_t = s_t @ w if b is None else s_t @ w + b
+        v, out = lif_step(v, i_t, p)
+        return v, out
+
+    v0 = jnp.zeros(spikes.shape[1:-1] + (w.shape[-1],), spikes.dtype)
+    _, out = lax.scan(step, v0, spikes)
+    return out

@@ -1,0 +1,261 @@
+"""Xpikeformer paper models: spiking ViT (encoder) and spiking GPT (decoder).
+
+These are the models of §VI (Tables III & IV) at paper scale, built from
+the paper's three ingredients:
+
+* Bernoulli rate coding + LIF neurons           (core/spikes.py)
+* stochastic spiking attention (SSA)            (core/ssa.py)
+* AIMC-executed linear layers with PCM non-idealities, HWAT and GDC
+                                                (core/aimc.py)
+
+Each model runs in one of three attention/activation modes, matching the
+paper's comparison rows:
+
+  mode="ann"  — vanilla transformer (softmax attention, GELU MLP, LayerNorm)
+  mode="lif"  — Spikformer-style SNN: LIF(LIF(QK^T)V) attention  [13]
+  mode="ssa"  — Xpikeformer: BNL(BNL(QK^T)V) stochastic spiking attention
+
+and one of three weight-execution modes (AIMCSim):
+
+  wmode="ideal" — float weights (conventional training, stage 1)
+  wmode="hwat"  — quantisation + programming noise in the forward pass,
+                  ideal backward (hardware-aware training, stage 2)
+  wmode="hw"    — programmed PCM state with drift at time t + optional GDC
+                  (long-term inference, Fig. 7 / Table V)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aimc as AM
+from repro.core import spikes as SP
+from repro.core import ssa as SSA
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AIMCSim:
+    wmode: str = "ideal"  # ideal | hwat | hw
+    cfg: AM.AIMCConfig = AM.AIMCConfig()
+    t_seconds: float = 0.0
+    gdc: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class SpikingConfig:
+    depth: int
+    dim: int
+    num_heads: int
+    T: int = 4
+    mode: str = "ssa"  # ann | lif | ssa
+    mlp_ratio: int = 4
+    # ViT task
+    image_size: int = 32
+    patch_size: int = 4
+    num_classes: int = 10
+    in_channels: int = 3
+    # GPT task
+    input_dim: int = 0  # continuous token features (ICL symbol detection)
+    vocab: int = 0  # output classes
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.num_heads
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+
+# ---------------------------------------------------------------------------
+# Linear layer under the three weight-execution modes
+# ---------------------------------------------------------------------------
+
+
+def _linear_def(key, d_in, d_out, scale=1.0):
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (scale / jnp.sqrt(d_in))
+    return {"w": w, "b": jnp.zeros((d_out,), jnp.float32)}
+
+
+def linear(p, x: Array, sim: AIMCSim, key: Optional[Array]) -> Array:
+    if "hw" in p:  # programmed PCM state (inference)
+        y = AM.aimc_matmul(key, x, p["hw"], sim.cfg, t_seconds=sim.t_seconds, gdc=sim.gdc)
+        return y + p["b"]
+    w = p["w"]
+    if sim.wmode == "hwat":
+        assert key is not None
+        w = AM.hwat_weights(key, w, sim.cfg)
+    return x @ w + p["b"]
+
+
+def program_model(key: Array, params: Any, cfg: AM.AIMCConfig) -> Any:
+    """Replace every {"w","b"} linear leaf by its programmed PCM state."""
+
+    def is_lin(x):
+        return isinstance(x, dict) and "w" in x and "b" in x
+
+    leaves, treedef = jax.tree.flatten(params, is_leaf=is_lin)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if is_lin(leaf):
+            out.append({"hw": AM.program_weights(k, leaf["w"], cfg), "b": leaf["b"]})
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_def(key, cfg: SpikingConfig):
+    ks = jax.random.split(key, 6)
+    d, f = cfg.dim, cfg.mlp_ratio * cfg.dim
+    return {
+        "ln1": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+        "ln2": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+        "wq": _linear_def(ks[0], d, d),
+        "wk": _linear_def(ks[1], d, d),
+        "wv": _linear_def(ks[2], d, d),
+        "wo": _linear_def(ks[3], d, d),
+        "w1": _linear_def(ks[4], d, f),
+        "w2": _linear_def(ks[5], f, d),
+    }
+
+
+def _ln(p, x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-6)) * p["scale"] + p["bias"]
+
+
+def _heads(x: Array, h: int) -> Array:
+    *lead, n, d = x.shape
+    return jnp.moveaxis(x.reshape(*lead, n, h, d // h), -2, -3)
+
+
+def _unheads(x: Array) -> Array:
+    *lead, h, n, hd = x.shape
+    return jnp.moveaxis(x, -3, -2).reshape(*lead, n, h * hd)
+
+
+def _ann_block(p, x, cfg: SpikingConfig, sim, keys, *, causal):
+    h = _ln(p["ln1"], x)
+    q = _heads(linear(p["wq"], h, sim, keys[0]), cfg.num_heads)
+    k = _heads(linear(p["wk"], h, sim, keys[1]), cfg.num_heads)
+    v = _heads(linear(p["wv"], h, sim, keys[2]), cfg.num_heads)
+    a = SSA.ann_attention(q, k, v, causal=causal)
+    x = x + linear(p["wo"], _unheads(a), sim, keys[3])
+    h = _ln(p["ln2"], x)
+    h = jax.nn.gelu(linear(p["w1"], h, sim, keys[4]))
+    return x + linear(p["w2"], h, sim, keys[5])
+
+
+def _spiking_block(p, s, cfg: SpikingConfig, sim, keys, rng, *, causal):
+    """s [T,B,N,D] binary. Table I SNN rows; no inter-layer normalisation."""
+    T = s.shape[0]
+
+    def sp_lin(pp, z, kk):  # LIF(W z^t): per-timestep crossbar MVM + LIF
+        pre = jax.vmap(lambda zt: linear(pp, zt, sim, kk))(z)
+        return SP.lif(pre)
+
+    q = _heads(sp_lin(p["wq"], s, keys[0]), cfg.num_heads)  # [T,B,H,N,hd]
+    k = _heads(sp_lin(p["wk"], s, keys[1]), cfg.num_heads)
+    v = _heads(sp_lin(p["wv"], s, keys[2]), cfg.num_heads)
+    if cfg.mode == "ssa":
+        a = SSA.ssa_attention(rng, q, k, v, causal=causal)
+    else:  # "lif" — Spikformer baseline
+        a = SSA.lif_spiking_attention(q, k, v, causal=causal)
+    a = _unheads(a)
+    s = s + sp_lin(p["wo"], a, keys[3])
+    h = sp_lin(p["w1"], s, keys[4])
+    return s + sp_lin(p["w2"], h, keys[5])
+
+
+def _run_blocks(params, x_or_s, cfg: SpikingConfig, sim, rng, *, causal):
+    n_keys = 6
+    for i, bp in enumerate(params["blocks"]):
+        kk = jax.random.split(jax.random.fold_in(rng, i), n_keys + 1)
+        if cfg.mode == "ann":
+            x_or_s = _ann_block(bp, x_or_s, cfg, sim, kk[:n_keys], causal=causal)
+        else:
+            x_or_s = _spiking_block(
+                bp, x_or_s, cfg, sim, kk[:n_keys], kk[n_keys], causal=causal
+            )
+    return x_or_s
+
+
+# ---------------------------------------------------------------------------
+# Spiking ViT (Table III)
+# ---------------------------------------------------------------------------
+
+
+def init_vit(key: Array, cfg: SpikingConfig):
+    ks = jax.random.split(key, cfg.depth + 3)
+    pdim = cfg.patch_size * cfg.patch_size * cfg.in_channels
+    return {
+        "patch": _linear_def(ks[0], pdim, cfg.dim),
+        "pos": jax.random.normal(ks[1], (cfg.num_patches, cfg.dim)) * 0.02,
+        "blocks": [_block_def(ks[2 + i], cfg) for i in range(cfg.depth)],
+        "head": _linear_def(ks[-1], cfg.dim, cfg.num_classes),
+    }
+
+
+def patchify(images: Array, patch: int) -> Array:
+    b, hh, ww, c = images.shape
+    ph, pw = hh // patch, ww // patch
+    x = images.reshape(b, ph, patch, pw, patch, c)
+    return jnp.moveaxis(x, 3, 2).reshape(b, ph * pw, patch * patch * c)
+
+
+def vit_forward(params, images: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Array) -> Array:
+    """images [B,H,W,C] -> logits [B, classes]."""
+    k_embed, k_enc, k_blocks, k_head = jax.random.split(rng, 4)
+    x = patchify(images, cfg.patch_size)
+    x = linear(params["patch"], x, sim, k_embed) + params["pos"]
+    if cfg.mode == "ann":
+        h = _run_blocks(params, x, cfg, sim, k_blocks, causal=False)
+        pooled = jnp.mean(h, axis=1)
+    else:
+        s = SP.rate_encode(k_enc, jax.nn.sigmoid(x), cfg.T)
+        s = _run_blocks(params, s, cfg, sim, k_blocks, causal=False)
+        pooled = jnp.mean(SP.rate_decode(s), axis=1)
+    return linear(params["head"], pooled, sim, k_head)
+
+
+# ---------------------------------------------------------------------------
+# Spiking GPT (Table IV — ICL wireless symbol detection)
+# ---------------------------------------------------------------------------
+
+
+def init_gpt(key: Array, cfg: SpikingConfig):
+    ks = jax.random.split(key, cfg.depth + 3)
+    return {
+        "embed": _linear_def(ks[0], cfg.input_dim, cfg.dim),
+        "pos": jax.random.normal(ks[1], (512, cfg.dim)) * 0.02,
+        "blocks": [_block_def(ks[2 + i], cfg) for i in range(cfg.depth)],
+        "head": _linear_def(ks[-1], cfg.dim, cfg.vocab),
+    }
+
+
+def gpt_forward(params, feats: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Array) -> Array:
+    """feats [B,L,input_dim] -> logits [B,L,vocab] (causal)."""
+    k_embed, k_enc, k_blocks, k_head = jax.random.split(rng, 4)
+    L = feats.shape[1]
+    x = linear(params["embed"], feats, sim, k_embed) + params["pos"][:L]
+    if cfg.mode == "ann":
+        h = _run_blocks(params, x, cfg, sim, k_blocks, causal=True)
+    else:
+        s = SP.rate_encode(k_enc, jax.nn.sigmoid(x), cfg.T)
+        s = _run_blocks(params, s, cfg, sim, k_blocks, causal=True)
+        h = SP.rate_decode(s)
+    return linear(params["head"], h, sim, k_head)

@@ -1,0 +1,193 @@
+"""Stochastic Spiking Attention (SSA) — the paper's core algorithm.
+
+Implements paper Eq. (6) / Algorithm 1:
+
+    SSA(Q^t, K^t, V^t) = BNL( BNL(Q^t K^t^T) V^t )
+
+with Q^t, K^t, V^t binary ``[T, ..., N, d_k]`` spike trains per head. All
+matrix products reduce to AND + count because the operands are binary; the
+BNL normalisers are the hardware integer comparators with I_max = d_k
+(scores) and I_max = N (output).
+
+Three interchangeable implementations are provided:
+
+* ``ssa_attention``           — differentiable reference used in training
+                                (float ops + straight-through Bernoulli).
+* ``ssa_attention_integer``   — bit-faithful integer simulation of the SSA
+                                tile (uint8 counters, integer comparators);
+                                used by tests as the hardware oracle.
+* ``kernels/ssa_attention.py``— the Pallas TPU kernel (bit-packed uint32
+                                lanes + popcount); validated against the
+                                integer simulation.
+
+Shapes follow the JAX convention ``[T, B, H, N, d]`` (time-major so that
+lax.scan pipelines timesteps exactly like the hardware streams them).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.spikes import bernoulli_st, bnl_integer
+
+Array = jax.Array
+
+
+def _causal_mask(n: int, dtype=jnp.float32) -> Array:
+    return jnp.tril(jnp.ones((n, n), dtype=dtype))
+
+
+def ssa_attention(
+    key: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = False,
+) -> Array:
+    """Differentiable SSA over spike trains ``[T, B, H, N, d]`` in {0,1}.
+
+    Returns binary attention output of the same shape. Per timestep t:
+
+        S^t[n,n'] ~ Bern( (1/d) sum_d Q^t[n,d] AND K^t[n',d] )   (Alg.1 l.5)
+        A^t[n,d]  ~ Bern( (1/N) sum_n' S^t[n,n'] AND V^t[n',d] ) (Alg.1 l.9)
+
+    For binary operands AND == multiply, so einsum is the exact rate math;
+    the Bernoulli sampling path matches the integer comparator because both
+    compare against a uniform grid of the same resolution.
+    """
+    T, B, H, N, d = q.shape
+    keys = jax.random.split(key, 2 * T).reshape(T, 2, 2)
+
+    mask = _causal_mask(N, q.dtype) if causal else None
+
+    def per_t(args):
+        kk, qt, kt, vt = args
+        # scores: [B, H, N, N] counts / d
+        counts_s = jnp.einsum("bhnd,bhmd->bhnm", qt, kt)
+        p_s = counts_s / d
+        if mask is not None:
+            p_s = p_s * mask
+        u_s = jax.random.uniform(kk[0], p_s.shape, dtype=p_s.dtype)
+        s_t = bernoulli_st(p_s, u_s)
+        # output: [B, H, N, d] counts / N
+        counts_a = jnp.einsum("bhnm,bhmd->bhnd", s_t, vt)
+        denom = jnp.arange(1, N + 1, dtype=p_s.dtype)[:, None] if causal else float(N)
+        p_a = counts_a / denom if causal else counts_a / denom
+        p_a = jnp.clip(p_a, 0.0, 1.0)
+        u_a = jax.random.uniform(kk[1], p_a.shape, dtype=p_a.dtype)
+        return bernoulli_st(p_a, u_a)
+
+    # vmap over time: SSA is stateless across t (BNL has no membrane), which
+    # is exactly why the hardware tile can pipeline timesteps back-to-back.
+    return jax.vmap(lambda kk, qt, kt, vt: per_t((kk, qt, kt, vt)))(keys, q, k, v)
+
+
+def ssa_attention_integer(
+    key: Array,
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = False,
+) -> Array:
+    """Bit-faithful integer SSA tile simulation (the test oracle).
+
+    Operands must be integer {0,1} arrays ``[T, B, H, N, d]``. Uses uint8
+    counters (d_k <= 256, §IV-B-2) and the unnormalised integer comparator
+    (count > r, r ~ U{0..I_max-1}). Deterministic given ``key``. Returns
+    uint8 spikes.
+    """
+    T, B, H, N, d = q.shape
+    assert d <= 256, "SSA counter is UINT8: d_K up to 2^8 = 256 (paper)"
+    qi = q.astype(jnp.int32)
+    ki = k.astype(jnp.int32)
+    vi = v.astype(jnp.int32)
+    keys = jax.random.split(key, 2 * T).reshape(T, 2, 2)
+
+    imask = jnp.tril(jnp.ones((N, N), jnp.int32)) if causal else None
+
+    def per_t(kk, qt, kt, vt):
+        counts_s = jnp.einsum("bhnd,bhmd->bhnm", qt, kt)  # AND + count
+        if imask is not None:
+            counts_s = counts_s * imask
+        r_s = jax.random.randint(kk[0], counts_s.shape, 0, d, dtype=jnp.int32)
+        s_t = (counts_s > r_s).astype(jnp.int32)
+        counts_a = jnp.einsum("bhnm,bhmd->bhnd", s_t, vt)
+        r_a = jax.random.randint(kk[1], counts_a.shape, 0, N, dtype=jnp.int32)
+        a_t = (counts_a > r_a).astype(jnp.uint8)
+        return a_t
+
+    return jax.vmap(per_t)(keys, q, k, v)
+
+
+def ssa_attention_rate(q_rate: Array, k_rate: Array, v_rate: Array, *, causal: bool = False) -> Array:
+    """Expected value of SSA output rates given input rates (analysis tool).
+
+    E[SSA] = clip((S_rate V_rate)/N) with S_rate = (Q_rate K_rate^T)/d — the
+    deterministic limit as T -> inf. Used by convergence tests/benchmarks.
+    Shapes ``[B, H, N, d]``.
+    """
+    d = q_rate.shape[-1]
+    n = q_rate.shape[-2]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q_rate, k_rate) / d
+    if causal:
+        s = s * _causal_mask(n, s.dtype)
+    a = jnp.einsum("bhnm,bhmd->bhnd", jnp.clip(s, 0.0, 1.0), v_rate) / n
+    return jnp.clip(a, 0.0, 1.0)
+
+
+def lif_spiking_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    v_thresh_s: float = 0.5,
+    v_thresh_a: float = 0.5,
+    causal: bool = False,
+) -> Array:
+    """Spikformer-style baseline attention  LIF(LIF(Q^t K^t^T) V^t)  (Table I, SNN col).
+
+    Stateful across timesteps: the LIF membranes integrate the (scaled)
+    integer products over t. This is the SOTA-spiking-transformer baseline
+    the paper compares SSA against (SNN-Digi-Opt energy model uses it).
+    """
+    T, B, H, N, d = q.shape
+    mask = _causal_mask(N, q.dtype) if causal else None
+
+    def step(carry, qkv_t):
+        v_s, v_a = carry
+        qt, kt, vt = qkv_t
+        scores = jnp.einsum("bhnd,bhmd->bhnm", qt, kt) / d
+        if mask is not None:
+            scores = scores * mask
+        v_s = 0.5 * v_s + scores
+        s_t = (v_s >= v_thresh_s).astype(q.dtype)
+        s_t_grad = s_t  # heaviside handled by caller's surrogate if training
+        v_s = v_s * (1.0 - s_t)
+        out = jnp.einsum("bhnm,bhmd->bhnd", s_t_grad, vt) / N
+        v_a = 0.5 * v_a + out
+        a_t = (v_a >= v_thresh_a).astype(q.dtype)
+        v_a = v_a * (1.0 - a_t)
+        return (v_s, v_a), a_t
+
+    v_s0 = jnp.zeros((B, H, N, N), q.dtype)
+    v_a0 = jnp.zeros((B, H, N, d), q.dtype)
+    _, out = lax.scan(step, (v_s0, v_a0), (q, k, v))
+    return out
+
+
+def ann_attention(q: Array, k: Array, v: Array, *, causal: bool = False) -> Array:
+    """Vanilla softmax attention (Table I ANN column) — the ANN baseline."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        n = q.shape[-2]
+        neg = jnp.finfo(q.dtype).min
+        scores = jnp.where(_causal_mask(n, jnp.bool_)[None, None], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhnm,bhmd->bhnd", w, v)

@@ -1,0 +1,101 @@
+"""In-context-learning MIMO symbol detection task (paper §VI Task 2).
+
+Follows [30] / [3]: a GPT-style decoder sees 18 query–answer pairs
+(received signal y, transmitted symbol x) drawn from ONE random unknown
+channel H, then must detect the symbol for a 19th query.  QPSK per transmit
+antenna: the class set is 4^N_t (16 for 2x2, 256 for 4x4 — "the number of
+classes grows exponentially", §VI-A).
+
+Token stream (length 2*pairs+1): alternating
+  query token:  features = [Re(y), Im(y), 0-vector]
+  answer token: features = [0, 0, one-hot(symbol)]
+The model predicts the symbol class at every *query* position; BER counts
+bit errors in the 2*N_t-bit Gray labelling of the class index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_QPSK = jnp.array([1 + 1j, 1 - 1j, -1 + 1j, -1 - 1j], jnp.complex64) / jnp.sqrt(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class MIMOConfig:
+    n_tx: int = 2
+    n_rx: int = 2
+    pairs: int = 18
+    snr_db: float = 20.0
+
+    @property
+    def n_classes(self) -> int:
+        return 4 ** self.n_tx
+
+    @property
+    def feat_dim(self) -> int:
+        return 2 * self.n_rx + self.n_classes
+
+    @property
+    def seq_len(self) -> int:
+        return 2 * self.pairs + 1
+
+    @property
+    def bits_per_symbol(self) -> int:
+        return 2 * self.n_tx
+
+
+def _symbols_of_class(cls: Array, n_tx: int) -> Array:
+    """Class index -> per-antenna QPSK symbols [.., n_tx] complex."""
+    idx = jnp.stack([(cls // (4 ** i)) % 4 for i in range(n_tx)], axis=-1)
+    return _QPSK[idx]
+
+
+def class_bits(cls: Array, n_tx: int) -> Array:
+    """2*n_tx bit labelling of a class index."""
+    nb = 2 * n_tx
+    return jnp.stack([(cls // (2 ** i)) % 2 for i in range(nb)], axis=-1)
+
+
+def sample_batch(key: Array, cfg: MIMOConfig, batch: int) -> Dict[str, Array]:
+    """Returns {features [B,L,F], labels [B,L], mask [B,L]}."""
+    kh, kx, kn = jax.random.split(key, 3)
+    n_tok = cfg.pairs + 1
+    h = (
+        jax.random.normal(kh, (batch, cfg.n_rx, cfg.n_tx), jnp.float32)
+        + 1j * jax.random.normal(jax.random.fold_in(kh, 1), (batch, cfg.n_rx, cfg.n_tx), jnp.float32)
+    ) / jnp.sqrt(2.0 * cfg.n_tx)
+    cls = jax.random.randint(kx, (batch, n_tok), 0, cfg.n_classes)
+    x = _symbols_of_class(cls, cfg.n_tx)  # [B,n_tok,n_tx]
+    noise_std = jnp.sqrt(10.0 ** (-cfg.snr_db / 10.0) / 2.0)
+    w = noise_std * (
+        jax.random.normal(kn, (batch, n_tok, cfg.n_rx))
+        + 1j * jax.random.normal(jax.random.fold_in(kn, 1), (batch, n_tok, cfg.n_rx))
+    )
+    y = jnp.einsum("brt,bnt->bnr", h, x) + w  # [B,n_tok,n_rx]
+
+    yfeat = jnp.concatenate([y.real, y.imag], axis=-1)  # [B,n_tok,2n_rx]
+    onehot = jax.nn.one_hot(cls, cfg.n_classes)
+
+    L, F = cfg.seq_len, cfg.feat_dim
+    feats = jnp.zeros((batch, L, F), jnp.float32)
+    feats = feats.at[:, 0::2, : 2 * cfg.n_rx].set(yfeat)  # queries at even pos
+    feats = feats.at[:, 1::2, 2 * cfg.n_rx :].set(onehot[:, :-1])  # answers
+    labels = jnp.zeros((batch, L), jnp.int32)
+    labels = labels.at[:, 0::2].set(cls)
+    mask = jnp.zeros((batch, L), jnp.float32).at[:, 0::2].set(1.0)
+    return {"features": feats, "labels": labels, "mask": mask}
+
+
+def ber(logits: Array, labels: Array, mask: Array, cfg: MIMOConfig) -> Array:
+    """Bit error rate over masked (query) positions."""
+    pred = jnp.argmax(logits, axis=-1)
+    pb = class_bits(pred, cfg.n_tx)
+    tb = class_bits(labels, cfg.n_tx)
+    errs = jnp.sum(jnp.abs(pb - tb), axis=-1).astype(jnp.float32)
+    return jnp.sum(errs * mask) / (jnp.sum(mask) * cfg.bits_per_symbol)

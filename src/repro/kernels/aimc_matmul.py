@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused AIMC spiking linear (crossbar MVM + LIF over T).
+
+Maps the paper's spiking-neuron tile (§IV-A) onto the TPU memory
+hierarchy:
+
+  PCM crossbar 128x128 tiles       ->  128x128 VMEM weight blocks (int8
+                                       5-bit levels, per-column f32 scale)
+  O(1) analog MVM                  ->  MXU dot per timestep
+  row-block partial sums -> CSA    ->  in-register f32 accumulation over
+                                       the d_in grid axis ("arbitrary"
+                                       revisiting order, accumulate into
+                                       the output block)
+  LIF shift-register + comparator  ->  fused membrane update on the last
+                                       d_in block — the T non-binary
+                                       pre-activations NEVER reach HBM,
+                                       which is exactly the row-block-wise
+                                       mapping's point (§IV-A-2).
+
+Grid: (batch tiles, d_out tiles, d_in tiles); the d_in axis is the
+innermost (sequential) axis so the membrane/current scratch lives in VMEM
+across the accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(s_ref, w_ref, scale_ref, out_ref, acc_ref, *, t_steps: int,
+            n_in_blocks: int, beta: float, v_thresh: float):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)  # [bin, bout] int8 levels
+    for t in range(t_steps):
+        st = s_ref[t].astype(jnp.float32)  # [bb, bin] binary spikes
+        acc_ref[t] = acc_ref[t] + jnp.dot(st, w, preferred_element_type=jnp.float32)
+
+    @pl.when(ib == n_in_blocks - 1)
+    def _fire():
+        scale = scale_ref[...].astype(jnp.float32)  # [bout]
+        v = jnp.zeros(acc_ref.shape[1:], jnp.float32)
+        for t in range(t_steps):
+            v = beta * v + acc_ref[t] * scale[None, :]
+            spike = (v >= v_thresh).astype(jnp.float32)
+            v = v * (1.0 - spike)
+            out_ref[t] = spike.astype(out_ref.dtype)
+
+
+def aimc_spiking_linear_kernel(
+    spikes: Array,  # [T, B, d_in] binary (any float/int dtype)
+    w_levels: Array,  # [d_in, d_out] int8 (5-bit conductance-pair levels)
+    scale: Array,  # [d_out] f32 per-column scale
+    *,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+    block_b: int = 128,
+    block_in: int = 128,
+    block_out: int = 128,
+    interpret: bool = False,
+) -> Array:
+    t, b, d_in = spikes.shape
+    d_out = w_levels.shape[1]
+    block_b = min(block_b, b)
+    block_in = min(block_in, d_in)
+    block_out = min(block_out, d_out)
+    assert b % block_b == 0 and d_in % block_in == 0 and d_out % block_out == 0
+    nb, ni, no = b // block_b, d_in // block_in, d_out // block_out
+    kern = functools.partial(
+        _kernel, t_steps=t, n_in_blocks=ni, beta=beta, v_thresh=v_thresh
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(nb, no, ni),  # d_in innermost: sequential accumulation
+        in_specs=[
+            pl.BlockSpec((t, block_b, block_in), lambda ib, io, ii: (0, ib, ii)),
+            pl.BlockSpec((block_in, block_out), lambda ib, io, ii: (ii, io)),
+            pl.BlockSpec((block_out,), lambda ib, io, ii: (io,)),
+        ],
+        out_specs=pl.BlockSpec((t, block_b, block_out), lambda ib, io, ii: (0, ib, io)),
+        out_shape=jax.ShapeDtypeStruct((t, b, d_out), jnp.uint8),
+        # per-timestep pre-activation accumulator lives in VMEM across the
+        # sequential d_in grid axis — never written to HBM
+        scratch_shapes=[pltpu.VMEM((t, block_b, block_out), jnp.float32)],
+        interpret=interpret,
+    )(spikes, w_levels, scale)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused LIF neuron over the spike-time axis.
+
+The ASIC's LIF unit is a shift register (beta=0.5 right shift) + comparator
+fed directly by crossbar partial sums (§IV-A-2).  The TPU analogue fuses
+the whole T-step membrane recurrence into one kernel so the non-binary
+membrane/current sequence never round-trips to HBM — the same
+"no intermediate pre-activation storage" insight as the row-block-wise
+mapping.
+
+Grid tiles the flattened feature axis; each program loops T steps in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _lif_kernel(cur_ref, out_ref, *, t_steps: int, beta: float, v_thresh: float):
+    v = jnp.zeros(cur_ref.shape[1:], jnp.float32)
+    for t in range(t_steps):  # static unroll: T is 4..16
+        v = beta * v + cur_ref[t].astype(jnp.float32)
+        spike = (v >= v_thresh).astype(jnp.float32)
+        v = v * (1.0 - spike)
+        out_ref[t] = spike.astype(out_ref.dtype)
+
+
+def lif_kernel(
+    currents: Array,  # [T, M] float
+    *,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+    block: int = 4096,
+    interpret: bool = False,
+) -> Array:
+    t, m = currents.shape
+    block = min(block, m)
+    assert m % block == 0, "ops.py pads the feature axis"
+    kern = functools.partial(_lif_kernel, t_steps=t, beta=beta, v_thresh=v_thresh)
+    return pl.pallas_call(
+        kern,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((t, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((t, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, m), jnp.uint8),
+        interpret=interpret,
+    )(currents)

@@ -1,0 +1,131 @@
+"""Jit'd public wrappers for the Pallas kernels: packing, padding, PRNs.
+
+These are what the framework calls; each wrapper
+* packs binary spike operands into uint32 lanes (32 AND-gates per VPU op),
+* pads shapes to kernel block multiples,
+* draws the comparator integers from a counter-based PRNG (the software
+  stand-in for the SSA engine's shared 32-bit LFSR array — all four bytes
+  of each word are used, per §IV-B-3 / core.spikes.split_prn_bytes),
+* and exposes ``interpret=`` so CPU tests execute the kernel body exactly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.aimc_matmul import aimc_spiking_linear_kernel
+from repro.kernels.lif import lif_kernel
+from repro.kernels.ssa_attention import ssa_attention_kernel
+
+Array = jax.Array
+
+
+def pack_bits(x: Array, axis: int = -1) -> Array:
+    """Pack a binary array into uint32 along ``axis`` (size % 32 == 0)."""
+    x = jnp.moveaxis(x, axis, -1)
+    *lead, n = x.shape
+    w = n // 32
+    xr = x.reshape(*lead, w, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    packed = jnp.sum(xr * weights, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(x: Array, n: int, axis: int = -1) -> Array:
+    xm = jnp.moveaxis(x, axis, -1)
+    bits = (xm[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    out = bits.reshape(*xm.shape[:-1], xm.shape[-1] * 32)[..., :n]
+    return jnp.moveaxis(out.astype(jnp.uint8), -1, axis)
+
+
+def draw_comparator_prns(key: Array, shape_s: Tuple[int, ...], shape_a: Tuple[int, ...],
+                         d: int, n: int) -> Tuple[Array, Array]:
+    """Uniform integers for the two Bernoulli comparator banks.
+
+    r_s ~ U{0..d-1}, r_a ~ U{0..n-1}; with d and n powers of two these are
+    exactly the low bits of an LFSR word (§IV-B-2)."""
+    k1, k2 = jax.random.split(key)
+    rs = jax.random.randint(k1, shape_s, 0, d, dtype=jnp.int32)
+    ra = jax.random.randint(k2, shape_a, 0, n, dtype=jnp.int32)
+    return rs, ra
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def ssa_attention_packed(
+    q: Array,  # [T, B, H, N, D] binary (any int/float in {0,1})
+    k: Array,
+    v: Array,
+    key: Array,
+    *,
+    causal: bool = False,
+    interpret: bool = True,
+) -> Array:
+    """Bit-packed SSA attention; returns uint8 spikes [T,B,H,N,D].
+
+    Requires D % 32 == 0 and N % 32 == 0 (the tile packs the d_k axis for
+    stage 1 and the n' axis for stage 2)."""
+    t, b, h, n, d = q.shape
+    assert d % 32 == 0 and n % 32 == 0, "pack axes must be multiples of 32"
+    g = t * b * h
+    qf = q.reshape(g, n, d).astype(jnp.uint8)
+    kf = k.reshape(g, n, d).astype(jnp.uint8)
+    vf = v.reshape(g, n, d).astype(jnp.uint8)
+    qp = pack_bits(qf, axis=-1)  # [G, N, D/32]
+    kp = pack_bits(kf, axis=-1)
+    vp = pack_bits(vf, axis=-2)  # pack over n': [G, N/32, D]
+    rs, ra = draw_comparator_prns(key, (g, n, n), (g, n, d), d, n)
+    out = ssa_attention_kernel(
+        qp, kp, vp, rs, ra, n=n, d=d, causal=causal, interpret=interpret
+    )
+    return out.reshape(t, b, h, n, d)
+
+
+@partial(jax.jit, static_argnames=("beta", "v_thresh", "interpret"))
+def lif_fused(currents: Array, *, beta: float = 0.5, v_thresh: float = 1.0,
+              interpret: bool = True) -> Array:
+    """Fused LIF over [T, ...] currents; returns uint8 spikes."""
+    t = currents.shape[0]
+    flat = currents.reshape(t, -1)
+    m = flat.shape[1]
+    block = 4096
+    pad = (-m) % min(block, max(m, 1))
+    if m < block:
+        block = m + pad
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = lif_kernel(flat, beta=beta, v_thresh=v_thresh, block=block,
+                     interpret=interpret)
+    return out[:, :m].reshape(currents.shape)
+
+
+@partial(jax.jit, static_argnames=("beta", "v_thresh", "interpret"))
+def aimc_spiking_linear(
+    spikes: Array,  # [T, B, d_in]
+    w_levels: Array,  # [d_in, d_out] int8
+    scale: Array,  # [d_out]
+    *,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+    interpret: bool = True,
+) -> Array:
+    t, b, d_in = spikes.shape
+    d_out = w_levels.shape[1]
+
+    def rup(x, m):
+        return (x + m - 1) // m * m
+
+    bb = rup(b, 8) if b < 128 else rup(b, 128)
+    di = rup(d_in, 128)
+    do = rup(d_out, 128)
+    sp = jnp.pad(spikes, ((0, 0), (0, bb - b), (0, di - d_in)))
+    wp = jnp.pad(w_levels, ((0, di - d_in), (0, do - d_out)))
+    sc = jnp.pad(scale, (0, do - d_out))
+    out = aimc_spiking_linear_kernel(
+        sp, wp, sc, beta=beta, v_thresh=v_thresh,
+        block_b=min(bb, 128), block_in=128, block_out=128, interpret=interpret,
+    )
+    return out[:, :b, :d_out]

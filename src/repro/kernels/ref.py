@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function computes the same integer/bit-exact semantics as its kernel
+from *unpacked* inputs.  Kernel tests sweep shapes/dtypes and
+``assert_allclose`` (exact for the integer kernels) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssa_attention_ref(
+    q: Array,  # [G, N, D] binary int
+    k: Array,  # [G, N, D]
+    v: Array,  # [G, N, D]
+    rs: Array,  # [G, N, N] int32 in [0, D)
+    ra: Array,  # [G, N, D] int32 in [0, N)
+    *,
+    causal: bool = False,
+) -> Array:
+    """Bit-exact SSA tile semantics (Algorithm 1 with explicit LFSR input)."""
+    qi = q.astype(jnp.int32)
+    ki = k.astype(jnp.int32)
+    vi = v.astype(jnp.int32)
+    counts_s = jnp.einsum("gnd,gmd->gnm", qi, ki)
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, n), jnp.int32))
+        counts_s = counts_s * mask
+    s = (counts_s > rs).astype(jnp.int32)
+    counts_a = jnp.einsum("gnm,gmd->gnd", s, vi)
+    return (counts_a > ra).astype(jnp.uint8)
+
+
+def lif_ref(currents: Array, *, beta: float = 0.5, v_thresh: float = 1.0) -> Array:
+    """[T, M] currents -> [T, M] uint8 spikes (Eqs. 2-3)."""
+
+    def step(v, i_t):
+        v = beta * v + i_t.astype(jnp.float32)
+        s = (v >= v_thresh).astype(jnp.float32)
+        return v * (1.0 - s), s.astype(jnp.uint8)
+
+    _, out = jax.lax.scan(step, jnp.zeros(currents.shape[1:], jnp.float32), currents)
+    return out
+
+
+def aimc_spiking_linear_ref(
+    spikes: Array,  # [T, B, d_in] binary
+    w_levels: Array,  # [d_in, d_out] int8
+    scale: Array,  # [d_out] f32
+    *,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+) -> Array:
+    """[T,B,d_out] uint8: LIF over per-timestep quantised crossbar MVMs."""
+    pre = jnp.einsum(
+        "tbi,io->tbo", spikes.astype(jnp.float32), w_levels.astype(jnp.float32)
+    ) * scale[None, None, :]
+
+    def step(v, i_t):
+        v = beta * v + i_t
+        s = (v >= v_thresh).astype(jnp.float32)
+        return v * (1.0 - s), s.astype(jnp.uint8)
+
+    _, out = jax.lax.scan(step, jnp.zeros(pre.shape[1:], jnp.float32), pre)
+    return out

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: stochastic spiking attention (SSA), bit-packed.
+
+TPU adaptation of the paper's N x N array of stochastic attention cells
+(§IV-B): the ASIC streams 1-bit Q/K/V through AND gates + counters; on TPU
+we pack 32 timestep-lanes... no — we pack the *contraction axis* into
+uint32 lanes so one VPU ``and`` + ``population_count`` replaces 32 AND
+gates + counter increments:
+
+  stage 1 (scores):   contraction over d_k  -> Q,K packed along d_k
+  stage 2 (output):   contraction over n'   -> S packed in-kernel along n',
+                                               V packed along n'
+
+The Bernoulli comparators use *externally supplied* uniform random integers
+(r_s in [0,d_k), r_a in [0,N)) — mirroring the SSA engine's shared LFSR
+array feeding the tiles (§IV-B-3), and making the kernel bit-exact
+reproducible against the pure-jnp oracle in ``ref.py``.
+
+Grid: one program per (t, b*h) pair — the hardware pipelines timesteps
+through the same stateless tile, we parallelise them.  Block shapes keep
+the whole [N, N] score tile in VMEM (N <= 128 per the paper's edge-AI
+sizing; ops.py tiles larger N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _popcount(x: Array) -> Array:
+    return lax.population_count(x)
+
+
+def _pack_bits_kernel_axis(s: Array) -> Array:
+    """Pack binary int32 [.., n, ..] -> uint32 along a *leading-of-last-two*
+    axis inside the kernel: s [N, N] -> [N, N//32] (pack axis = -1)."""
+    n = s.shape[-1]
+    w = n // 32
+    s3 = s.reshape(*s.shape[:-1], w, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(s3 * weights, axis=-1, dtype=jnp.uint32)
+
+
+def _ssa_kernel(qp_ref, kp_ref, vp_ref, rs_ref, ra_ref, out_ref, *, n: int, d: int, causal: bool):
+    """One (t, b*h) tile.
+
+    qp [N, Wd] u32   — Q packed along d_k
+    kp [N, Wd] u32   — K packed along d_k
+    vp [Wn, D] u32   — V packed along n'
+    rs [N, N] i32    — LFSR integers for the score comparators
+    ra [N, D] i32    — LFSR integers for the output comparators
+    out [N, D] u8    — binary attention output A^t
+    """
+    qp = qp_ref[0]
+    kp = kp_ref[0]
+    # stage 1: counts[i,j] = popcount_d(q_i & k_j)   (AND + counter, §IV-B-2)
+    anded = qp[:, None, :] & kp[None, :, :]  # [N, N, Wd]
+    counts_s = jnp.sum(_popcount(anded), axis=-1).astype(jnp.int32)
+    if causal:
+        ii = lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        jj = lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        counts_s = jnp.where(jj <= ii, counts_s, 0)
+    s = (counts_s > rs_ref[0]).astype(jnp.int32)  # Bernoulli comparator
+
+    # stage 2: pack S along n', AND with packed V, popcount over n'
+    sp = _pack_bits_kernel_axis(s)  # [N, Wn]
+    vp = vp_ref[0]  # [Wn, D]
+    anded2 = sp[:, :, None] & vp[None, :, :]  # [N, Wn, D]
+    counts_a = jnp.sum(_popcount(anded2), axis=1).astype(jnp.int32)
+    out_ref[0] = (counts_a > ra_ref[0]).astype(jnp.uint8)
+
+
+def ssa_attention_kernel(
+    qp: Array,  # [G, N, Wd] u32  (G = T*B*H fused grid axis)
+    kp: Array,  # [G, N, Wd] u32
+    vp: Array,  # [G, Wn, D] u32
+    rs: Array,  # [G, N, N] i32
+    ra: Array,  # [G, N, D] i32
+    *,
+    n: int,
+    d: int,
+    causal: bool,
+    interpret: bool = False,
+) -> Array:
+    g, _, wd = qp.shape
+    wn = vp.shape[1]
+    kern = functools.partial(_ssa_kernel, n=n, d=d, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, n, wd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, wd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, wn, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), jnp.uint8),
+        interpret=interpret,
+    )(qp, kp, vp, rs, ra)

@@ -1,0 +1,48 @@
+"""Elastic scaling: recompute the sharding plan for a changed mesh.
+
+When a restart comes up with a different device count (node failures, or
+scale-up), the checkpoint (saved unsharded, see checkpoint/manager.py) is
+restored with shardings computed *for the new mesh*.  Because all layouts
+derive from the logical-axis rules in parallel/sharding.py, the plan is a
+pure function of (config, mesh): dims that no longer divide the new axis
+sizes fall back to replication automatically.
+
+``resharding_plan`` additionally reports what changed, for operator logs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.optim import adamw as A
+from repro.parallel import sharding as SH
+from repro.models import transformer as T
+
+
+def state_shardings(cfg, mesh: Optional[Mesh], opt: A.AdamWConfig, *, fsdp: bool = True):
+    """(param shardings, opt-state shardings) for a given mesh."""
+    pspecs = SH.param_pspecs(cfg, mesh, fsdp=fsdp)
+    aparams = T.abstract_params(cfg)
+    ospecs = A.opt_state_pspecs(pspecs, aparams, opt)
+    return SH.to_shardings(pspecs, mesh), SH.to_shardings(ospecs, mesh)
+
+
+def resharding_plan(cfg, old_mesh: Mesh, new_mesh: Mesh, *, fsdp: bool = True) -> Dict[str, Any]:
+    """Diff the param layouts between two meshes (for logging/validation)."""
+    old = SH.param_pspecs(cfg, old_mesh, fsdp=fsdp)
+    new = SH.param_pspecs(cfg, new_mesh, fsdp=fsdp)
+    changed = []
+    flat_old = jax.tree_util.tree_flatten_with_path(old)[0]
+    flat_new = jax.tree.leaves(new)
+    for (path, o), n in zip(flat_old, flat_new):
+        if tuple(o) != tuple(n):
+            changed.append({"param": jax.tree_util.keystr(path), "old": str(o), "new": str(n)})
+    return {
+        "old_mesh": dict(zip(old_mesh.axis_names, old_mesh.devices.shape)),
+        "new_mesh": dict(zip(new_mesh.axis_names, new_mesh.devices.shape)),
+        "n_params_relaid": len(changed),
+        "changes": changed[:32],
+    }

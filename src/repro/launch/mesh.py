@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the real single CPU device.
+
+Mesh semantics:
+  pod    — inter-pod data parallelism (DCN); gradients all-reduce here.
+  data   — intra-pod data parallelism + FSDP weight shard (ZeRO-3).
+  model  — tensor / sequence / expert parallelism (ICI minor axis).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    have = len(jax.devices())
+    if have == ndev:
+        return jax.make_mesh(shape, axes)
+    if have > ndev:  # e.g. 512 forced host devices, single-pod 256 mesh
+        from jax.sharding import Mesh
+
+        devs = np.array(jax.devices()[:ndev]).reshape(shape)
+        return Mesh(devs, axes)
+    raise RuntimeError(
+        f"need {ndev} devices for mesh {shape}, have {have}; run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py sets this)"
+    )
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (1, 1), axes: Optional[Tuple[str, ...]] = None):
+    """Tiny mesh (defaults (1,1) data/model) for CPU tests: gives shard_map
+    its axis names without needing multiple devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    axes = axes or (("pod", "data", "model")[-len(shape):])
+    ndev = int(np.prod(shape))
+    devs = np.array(jax.devices()[:ndev]).reshape(shape)
+    return Mesh(devs, axes)

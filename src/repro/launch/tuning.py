@@ -1,0 +1,78 @@
+"""Per-(arch, shape) parallelism tuning table.
+
+``parallel_for`` returns the ParallelConfig used by the dry-run and the
+launcher.  The ``variant`` tag selects perf-hillclimb configurations so
+§Perf iterations are reproducible cells side by side with the baselines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+
+
+def parallel_for(cfg: ModelConfig, shape: ShapeConfig, *, variant: str = "base") -> ParallelConfig:
+    p = ParallelConfig()
+    # arctic-480b: 469B params; int8 Adam moments + full remat are what fit
+    # the optimizer on 256 chips (see EXPERIMENTS.md §Dry-run).
+    if cfg.name == "arctic-480b":
+        p = dataclasses.replace(p, opt_state_dtype="int8", remat="full")
+    if cfg.name == "qwen2.5-32b" and shape.mode == "train":
+        p = dataclasses.replace(p, remat="block")
+    if not cfg.is_moe:
+        p = dataclasses.replace(p, moe_impl="dense")
+
+    # ---- hillclimb variants (referenced from EXPERIMENTS.md §Perf) ----
+    for tag in variant.split("+"):
+        if tag in ("base", ""):
+            continue
+        elif tag == "prod":
+            # shipped production layout = the §Perf hillclimb winners:
+            #  * small models (<2B): pure data parallelism (HC1, 3.5x)
+            #  * big dense train: int8 Adam + bf16 grads + full remat (HC3)
+            #  * MoE decode token-gather is automatic in models/moe.py (HC2)
+            n_est = cfg.num_layers * cfg.d_model * cfg.d_model * (
+                12 if not cfg.is_moe else 4 + 3 * cfg.num_experts * cfg.d_ff / cfg.d_model
+            )
+            if n_est < 2e9:
+                p = dataclasses.replace(p, pure_dp=True, fsdp=False, seq_shard=False,
+                                        grad_dtype="bfloat16", remat="full")
+            elif shape.mode == "train":
+                p = dataclasses.replace(p, grad_dtype="bfloat16", remat="full",
+                                        opt_state_dtype="int8")
+        elif tag == "noseq":
+            p = dataclasses.replace(p, seq_shard=False)
+        elif tag == "nofsdp":
+            p = dataclasses.replace(p, fsdp=False)
+        elif tag == "remat_none":
+            p = dataclasses.replace(p, remat="none")
+        elif tag == "remat_full":
+            p = dataclasses.replace(p, remat="full")
+        elif tag.startswith("mb"):
+            p = dataclasses.replace(p, microbatches=int(tag[2:]))
+        elif tag == "gradcomp":
+            p = dataclasses.replace(p, grad_compression=True)
+        elif tag == "opt8":
+            p = dataclasses.replace(p, opt_state_dtype="int8")
+        elif tag == "optbf16":
+            p = dataclasses.replace(p, opt_state_dtype="bfloat16")
+        elif tag == "gradbf16":
+            p = dataclasses.replace(p, grad_dtype="bfloat16")
+        elif tag == "moetok":
+            pass  # label-only: records the auto token-gather MoE strategy
+        elif tag == "puredp":
+            p = dataclasses.replace(p, pure_dp=True, fsdp=False, seq_shard=False)
+        elif tag.startswith("chunk"):
+            pass  # model-level tag, handled by model_for()
+        else:
+            raise ValueError(f"unknown variant tag {tag!r}")
+    return p
+
+
+def model_for(cfg: ModelConfig, *, variant: str = "base") -> ModelConfig:
+    """Model-level hillclimb overrides (e.g. SSD chunk length)."""
+    for tag in variant.split("+"):
+        if tag.startswith("chunk") and tag != "chunk":
+            cfg = dataclasses.replace(cfg, ssm_chunk=int(tag[5:]))
+    return cfg

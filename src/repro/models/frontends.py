@@ -1,0 +1,29 @@
+"""Modality frontend STUBS (per assignment spec).
+
+``[audio]`` (musicgen) and ``[vlm]`` (pixtral) architectures specify the
+transformer *backbone* only; the EnCodec tokenizer / Pixtral-ViT vision
+tower are out of scope.  ``input_specs()`` therefore provides *precomputed*
+frame/patch embeddings — these helpers generate matching synthetic features
+for smoke tests and describe the abstract input signature for the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_feature_dim(cfg: ModelConfig) -> int:
+    return cfg.frontend_dim
+
+
+def synth_frontend_batch(key, cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, jax.Array]:
+    """Synthetic precomputed embeddings + targets for smoke tests/examples."""
+    k1, k2 = jax.random.split(key)
+    emb = jax.random.normal(k1, (batch, seq_len, cfg.frontend_dim), jnp.float32)
+    tgt = jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size, jnp.int32)
+    return {"embeddings": emb, "targets": tgt}

@@ -1,0 +1,408 @@
+"""Core neural layers for the generic LM stack.
+
+Pure-functional: every layer is ``apply(params, x, ...)`` with params a dict
+of jnp arrays.  Parameter *schemas* (shape + logical sharding axes) live
+beside the initialisers so the sharding layer (parallel/sharding.py) can map
+every leaf to a PartitionSpec without instantiating weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Parameter schema plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape, logical axes, init scale."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (or None)
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0
+    fan_in: Optional[int] = None  # override (e.g. layer-stacked params)
+
+    def materialise(self, key: Array, dtype) -> Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan = self.fan_in or (self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1))
+        std = self.scale / math.sqrt(fan)
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(key: Array, schema: Any, dtype) -> Any:
+    """Materialise a pytree of ParamDefs into arrays (one fold of the key)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = [d.materialise(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(schema: Any, dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    out = [jax.ShapeDtypeStruct(d.shape, dtype) for d in leaves]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def norm_schema(d: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: Dict[str, Array], x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm(params: Dict[str, Array], x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, params, x: Array) -> Array:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotate ``x [..., S, H, D]`` by ``positions [..., S]`` (broadcastable)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, global + sliding-window), train/prefill and decode paths
+# ---------------------------------------------------------------------------
+
+
+def attention_schema(cfg) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s: Dict[str, Any] = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamDef((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _qkv(params, x: Array, positions: Array, cfg) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Optional[Array], softcap: float) -> Array:
+    """Grouped scaled-dot-product attention.  q [B,S,H,D], k/v [B,L,K,D]."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, d)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(d)
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", w, v)
+    return out.reshape(b, s, h, d)
+
+
+def causal_mask(s: int, l: int, offset: int = 0) -> Array:
+    """[s, l] boolean mask: query i attends to key j iff j <= i + offset."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(l)[None, :]
+    return kj <= qi
+
+
+def window_mask(s: int, l: int, window: int, offset: int = 0) -> Array:
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(l)[None, :]
+    return (kj <= qi) & (kj > qi - window)
+
+
+_FLASH_BLOCK = 1024
+_FLASH_MIN_SEQ = 2048
+
+# Exact-flops measurement mode (launch/dryrun.py): XLA's cost analysis
+# counts a lax.scan body ONCE regardless of trip count, so the roofline
+# measurement variant replaces scanned attention (flash / banded-Q-scan)
+# with scan-free equivalents whose HLO flops are exact.  Never enabled for
+# real execution.
+EXACT_FLOPS_MODE = False
+
+
+def _flash_attention(q: Array, k: Array, v: Array, softcap: float, *, window: int = 0,
+                     blk: int = _FLASH_BLOCK) -> Array:
+    """Online-softmax (flash) causal attention: lax.scan over KV blocks.
+
+    Never materialises the [S, S] score matrix — the score block
+    [B,K,G,S,blk] is the peak transient.  This is the pure-XLA analogue of
+    a flash kernel (the real TPU kernel would be Pallas; on this CPU
+    container the dry-run must stay XLA-lowerable at 512 devices).
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    nb = s // blk
+    qg = q.reshape(b, s, kvh, g, d)
+    scale = 1.0 / math.sqrt(d)
+    q_pos = jnp.arange(s)
+
+    kb = jnp.moveaxis(k.reshape(b, nb, blk, kvh, d), 1, 0)  # [nb,B,blk,K,D]
+    vb = jnp.moveaxis(v.reshape(b, nb, blk, kvh, d), 1, 0)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        j, k_j, v_j = xs
+        k_pos = j * blk + jnp.arange(blk)
+        sblk = jnp.einsum("bskgd,blkd->bkgsl", qg, k_j).astype(jnp.float32) * scale
+        if softcap > 0:
+            sblk = jnp.tanh(sblk / softcap) * softcap
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        sblk = jnp.where(mask[None, None, None], sblk, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sblk, axis=-1))
+        p = jnp.exp(sblk - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgsl,blkd->bskgd", p.astype(q.dtype), v_j)
+        acc = acc * jnp.moveaxis(corr, 3, 1)[..., None].astype(q.dtype) + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, s, kvh, g, d), q.dtype)
+    (m, l, acc), _ = lax.scan(
+        jax.checkpoint(step), (m0, l0, acc0), (jnp.arange(nb), kb, vb)
+    )
+    out = acc / jnp.moveaxis(jnp.maximum(l, 1e-20), 3, 1)[..., None].astype(q.dtype)
+    return out.reshape(b, s, h, d)
+
+
+def _banded_local_vmap(q: Array, k: Array, v: Array, cfg, window: int) -> Array:
+    """Scan-free block-banded sliding window (exact-flops variant)."""
+    b, s, h, d = q.shape
+    nb = s // window
+    kvh = k.shape[2]
+    qb = q.reshape(b, nb, window, h, d)
+    kb = k.reshape(b, nb, window, kvh, d)
+    vb = v.reshape(b, nb, window, kvh, d)
+    k_prev = jnp.pad(kb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    v_prev = jnp.pad(vb[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    kk = jnp.concatenate([k_prev, kb], axis=2)
+    vv = jnp.concatenate([v_prev, vb], axis=2)
+    base = window_mask(window, 2 * window, window, offset=window)
+    first = base & (jnp.arange(2 * window)[None, :] >= window)
+    mask = jnp.where(jnp.arange(nb)[:, None, None] == 0, first, base)
+    out = jax.vmap(
+        lambda qq, kkk, vvv, m: _sdpa(qq, kkk, vvv, m[None, None, None], cfg.attn_softcap),
+        in_axes=(1, 1, 1, 0), out_axes=1,
+    )(qb, kk, vv, mask)
+    return out.reshape(b, s, h, d)
+
+
+def _banded_local(q: Array, k: Array, v: Array, cfg, window: int) -> Array:
+    """Sliding-window attention, lax.scan over Q blocks of size ``window``.
+
+    Each Q block attends to exactly (itself + predecessor block): FLOPs are
+    O(S * 2w), the peak transient one [w, 2w] score block."""
+    b, s, h, d = q.shape
+    nb = s // window
+    kvh = k.shape[2]
+    qb = jnp.moveaxis(q.reshape(b, nb, window, h, d), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nb, window, kvh, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, window, kvh, d), 1, 0)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:1]), kb[:-1]], axis=0)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:1]), vb[:-1]], axis=0)
+
+    base = window_mask(window, 2 * window, window, offset=window)
+    first = base & (jnp.arange(2 * window)[None, :] >= window)
+
+    def step(_, xs):
+        i, qq, kk1, kk2, vv1, vv2 = xs
+        kk = jnp.concatenate([kk1, kk2], axis=1)  # [B,2w,K,D]
+        vv = jnp.concatenate([vv1, vv2], axis=1)
+        mask = jnp.where(i == 0, first, base)
+        o = _sdpa(qq, kk, vv, mask[None, None, None], cfg.attn_softcap)
+        return None, o
+
+    _, ob = lax.scan(
+        jax.checkpoint(step), None, (jnp.arange(nb), qb, k_prev, kb, v_prev, vb)
+    )
+    return jnp.moveaxis(ob, 0, 1).reshape(b, s, h, d)
+
+
+def attention(params, x: Array, positions: Array, cfg, *, window: int = 0) -> Array:
+    """Full (or sliding-window) causal self-attention for train/prefill.
+
+    Long sequences use the flash (online-softmax) path for global layers
+    and the banded Q-block scan for sliding-window layers; short sequences
+    use the plain masked einsum.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, positions, cfg)
+    blk = _FLASH_BLOCK
+    while blk > 128 and s % blk:
+        blk //= 2
+    if window and s > 2 * window and s % window == 0:
+        fn = _banded_local_vmap if EXACT_FLOPS_MODE else _banded_local
+        out = fn(q, k, v, cfg, window)
+    elif not EXACT_FLOPS_MODE and s >= _FLASH_MIN_SEQ and s % blk == 0:
+        out = _flash_attention(q, k, v, cfg.attn_softcap, window=window, blk=blk)
+    else:
+        m = window_mask(s, s, window) if window else causal_mask(s, s)
+        out = _sdpa(q, k, v, m[None, None, None], cfg.attn_softcap)
+    return jnp.einsum("bshd,hdk->bsk", out, params["wo"].astype(x.dtype))
+
+
+def attention_decode(
+    params, x: Array, cache: Dict[str, Array], cfg, *, window: int = 0
+) -> Tuple[Array, Dict[str, Array]]:
+    """Single-token decode with a KV cache.
+
+    cache: {"k": [B,L,K,D], "v": [B,L,K,D], "pos": [] int32} — ``pos`` is the
+    number of valid tokens.  For windowed layers the cache is a ring buffer
+    of length ``window``.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    pos = cache["pos"]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    L = cache["k"].shape[1]
+    slot = (pos % jnp.int32(window)) if window else pos
+    ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    idx = jnp.arange(L)
+    if window:
+        valid = (idx < jnp.minimum(pos + 1, L))[None, :]
+    else:
+        valid = (idx <= pos)[None, :]
+    out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), valid[None, None, :, :], cfg.attn_softcap)
+    y = jnp.einsum("bshd,hdk->bsk", out, params["wo"].astype(x.dtype))
+    return y, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def attention_cache_schema(cfg, batch: int, seq_len: int, *, window: int = 0):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = min(window, seq_len) if window else seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "k": jax.ShapeDtypeStruct((batch, L, kv, hd), dt),
+        "v": jax.ShapeDtypeStruct((batch, L, kv, hd), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense feed-forward)
+# ---------------------------------------------------------------------------
+
+
+def mlp_schema(cfg, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "wi": ParamDef((d, f), ("embed", "ffn")),
+        "wo": ParamDef((f, d), ("ffn", "embed")),
+    }
+    if cfg.gated_mlp:
+        s["wg"] = ParamDef((d, f), ("embed", "ffn"))
+    return s
+
+
+def _act(kind: str, x: Array) -> Array:
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp(params, x: Array, cfg) -> Array:
+    h = x @ params["wi"].astype(x.dtype)
+    if "wg" in params:
+        h = _act(cfg.act, x @ params["wg"].astype(x.dtype)) * h
+    else:
+        h = _act(cfg.act, h)
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_schema(cfg) -> Dict[str, ParamDef]:
+    s = {"table": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+    return s
+
+
+def embed(params, tokens: Array, dtype) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed_schema(cfg) -> Dict[str, ParamDef]:
+    return {"w": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))}
+
+
+def unembed(params, x: Array, cfg) -> Array:
+    logits = x @ params["w"].astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits

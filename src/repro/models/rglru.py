@@ -1,0 +1,145 @@
+"""RecurrentGemma's RG-LRU recurrent block (arXiv:2402.19427).
+
+Recurrence (per channel):
+
+    r_t = sigmoid(W_r x_t + b_r)            recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The full block is: linear in-proj to (x, gate), short causal depthwise conv
+on x, RG-LRU, then out-proj of h * gelu(gate).  Training/prefill evaluates
+the linear recurrence with ``lax.associative_scan`` (log-depth, parallel on
+the batch/width axes — the TPU-native replacement for the paper's fused GPU
+scan kernel); decode carries h.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamDef
+
+Array = jax.Array
+
+_C = 8.0
+
+
+def rglru_width(cfg) -> int:
+    return cfg.rglru_width or cfg.d_model
+
+
+def rglru_schema(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    w = rglru_width(cfg)
+    k = cfg.rglru_conv_width
+    return {
+        "w_x": ParamDef((d, w), ("embed", "lru")),
+        "w_gate": ParamDef((d, w), ("embed", "lru")),
+        "conv_w": ParamDef((k, w), (None, "lru")),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        "w_r": ParamDef((w, w), ("lru", "lru_in")),
+        "b_r": ParamDef((w,), ("lru",), init="zeros"),
+        "w_i": ParamDef((w, w), ("lru", "lru_in")),
+        "b_i": ParamDef((w,), ("lru",), init="zeros"),
+        "lam": ParamDef((w,), ("lru",), init="ones"),
+        "w_out": ParamDef((w, d), ("lru", "embed")),
+    }
+
+
+def _constrain_w(t: Array, pctx) -> Array:
+    """Shard the LRU width over the model axis (and batch over DP).
+
+    The recurrence is elementwise over width, so width-sharding makes the
+    whole scan embarrassingly parallel on the TP axis — the right layout
+    even though the surrounding blocks are sequence-sharded."""
+    if pctx is None or pctx.mesh is None or pctx.tp_axis is None:
+        return t
+    if t.shape[-1] % pctx.tp_size:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(pctx.mesh, P(pctx.dp_axes or None, None, pctx.tp_axis))
+    )
+
+
+def _conv(x: Array, w: Array, b: Array) -> Array:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _gates(params, xc: Array):
+    r = jax.nn.sigmoid(xc @ params["w_r"].astype(xc.dtype) + params["b_r"].astype(xc.dtype))
+    i = jax.nn.sigmoid(xc @ params["w_i"].astype(xc.dtype) + params["b_i"].astype(xc.dtype))
+    log_a = (-_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta, i
+
+
+def rglru_mixer(params, x: Array, cfg, *, return_state: bool = False, pctx=None):
+    """x [B,L,D] -> [B,L,D] (train/prefill, associative scan over L)."""
+    b, L, _ = x.shape
+    xin = _constrain_w(x @ params["w_x"].astype(x.dtype), pctx)
+    gate = _constrain_w(x @ params["w_gate"].astype(x.dtype), pctx)
+    xc = _constrain_w(_conv(xin, params["conv_w"], params["conv_b"]), pctx)
+
+    a, beta, i = _gates(params, xc)
+    bterm = (beta * (i * xc).astype(jnp.float32)).astype(jnp.float32)  # [B,L,W]
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = lax.associative_scan(combine, (a, bterm), axis=1)
+    y = (h.astype(x.dtype) * jax.nn.gelu(gate)) @ params["w_out"].astype(x.dtype)
+    if return_state:
+        k = cfg.rglru_conv_width
+        conv_tail = jnp.pad(xin, ((0, 0), (max(k - 1 - L, 0), 0), (0, 0)))[:, -(k - 1) :, :]
+        return y, {
+            "h": h[:, -1, :],
+            "conv": conv_tail,
+            "pos": jnp.int32(L),
+        }
+    return y
+
+
+def rglru_cache_schema(cfg, batch: int):
+    w = rglru_width(cfg)
+    k = cfg.rglru_conv_width
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, k - 1, w), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def rglru_decode(params, x: Array, cache, cfg):
+    """One-token decode. x [B,1,D]."""
+    b = x.shape[0]
+    xin = x @ params["w_x"].astype(x.dtype)  # [B,1,W]
+    gate = x @ params["w_gate"].astype(x.dtype)
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), xin], axis=1)
+    xc = (
+        jnp.einsum("bkc,kc->bc", hist, params["conv_w"].astype(x.dtype))
+        + params["conv_b"].astype(x.dtype)
+    )[:, None, :]
+    a, beta, i = _gates(params, xc)
+    h = a[:, 0] * cache["h"] + (beta[:, 0] * (i[:, 0] * xc[:, 0]).astype(jnp.float32))
+    y = (h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate)) @ params["w_out"].astype(x.dtype)
+    return y, {
+        "h": h,
+        "conv": hist[:, 1:, :].astype(cache["conv"].dtype),
+        "pos": cache["pos"] + 1,
+    }

@@ -1,0 +1,259 @@
+"""Mamba-2 (state-space duality, SSD) mixer — chunked matmul formulation.
+
+The SSD recurrence per head (head dim P, state dim S):
+
+    h_t = a_t * h_{t-1} + B_t (dt_t x_t)^T        h in R^{S x P}
+    y_t = C_t^T h_t + D x_t
+
+is evaluated in training/prefill with the chunked algorithm of Dao & Gu
+(arXiv:2405.21060): the sequence is cut into chunks of Q tokens; within a
+chunk the quadratic "attention" form runs on the MXU, across chunks a short
+scan carries the [S, P] state.  This keeps everything matmul-shaped — the
+TPU adaptation of the paper's selective-scan kernel.
+
+Sharding notes: projections are kept *separate* (w_z / w_x / w_bc / w_dt)
+rather than fused, so the inner dimension of each can be tensor-sharded over
+the ``model`` axis without splits crossing shard boundaries.  SSD heads are
+sharded over ``model`` (48 heads / 16 = 3 for mamba2-780m); B/C groups are
+small and replicated.
+
+Decode is the plain O(1)-per-token recurrence on a carried state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamDef
+
+Array = jax.Array
+
+CHUNK = 256
+
+
+def ssd_dims(cfg) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_head_dim, cfg.ssm_state_dim
+
+
+def ssd_schema(cfg) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in, h, p, s = ssd_dims(cfg)
+    g = cfg.ssm_n_groups
+    k = cfg.ssm_conv_width
+    return {
+        "w_z": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "w_x": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "w_bc": ParamDef((d, 2 * g * s), ("embed", None)),
+        "w_dt": ParamDef((d, h), ("embed", "ssm_heads")),
+        "conv_x_w": ParamDef((k, d_in), (None, "ssm_inner")),
+        "conv_x_b": ParamDef((d_in,), ("ssm_inner",), init="zeros"),
+        "conv_bc_w": ParamDef((k, 2 * g * s), (None, None)),
+        "conv_bc_b": ParamDef((2 * g * s,), (None,), init="zeros"),
+        "a_log": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "norm_scale": ParamDef((d_in,), ("ssm_inner",), init="ones"),
+        "w_out": ParamDef((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _depthwise_causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """x [B,L,C], w [K,C] depthwise causal conv + silu."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K=4: unrolled taps, stays fused
+        out = out + xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _ssd_chunked(xh, a, bmat, cmat, *, chunk: int = CHUNK):
+    """Chunked SSD core.
+
+    xh   [B,L,H,P]   dt-scaled inputs
+    a    [B,L,H]     per-step decay in (0,1] (float32)
+    bmat [B,L,G,S], cmat [B,L,G,S]
+    Returns y [B,L,H,P] and final state [B,H,S,P].
+    """
+    b, L, h, p = xh.shape
+    g, s = bmat.shape[2], bmat.shape[3]
+    q = min(chunk, L)
+    nc = L // q
+    hg = h // g
+
+    def chunk(t):
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    xh_c, a_c = chunk(xh), chunk(a)
+    b_c, c_c = chunk(bmat), chunk(cmat)
+
+    la = jnp.log(jnp.maximum(a_c, 1e-20))  # [B,NC,Q,H] f32
+    cum = jnp.cumsum(la, axis=2)
+
+    # ---- intra-chunk (quadratic, MXU-friendly) ----
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: future entries have dec > 0, and exp(dec)=inf would
+    # poison the backward pass through jnp.where (0 * inf = NaN)
+    dec = jnp.where(mask[None, None, :, :, None], dec, -1e30)
+    gamma = jnp.exp(dec).astype(xh.dtype)
+    cb = jnp.einsum("bnigs,bnjgs->bnijg", c_c, b_c)  # [B,NC,Q,Q,G]
+    # expand groups to heads inside the einsum via a [G, H/G] head reshape
+    gam_h = gamma.reshape(b, nc, q, q, g, hg)
+    y_intra = jnp.einsum("bnijg,bnijgh,bnjghp->bnighp", cb, gam_h, xh_c.reshape(b, nc, q, g, hg, p))
+    y_intra = y_intra.reshape(b, nc, q, h, p)
+
+    # ---- chunk states ----
+    rem = jnp.exp(cum[:, :, -1:, :] - cum).astype(xh.dtype)  # [B,NC,Q,H]
+    states = jnp.einsum(
+        "bnqgs,bnqgh,bnqghp->bnghsp",
+        b_c,
+        rem.reshape(b, nc, q, g, hg),
+        xh_c.reshape(b, nc, q, g, hg, p),
+    ).reshape(b, nc, h, s, p)
+
+    # ---- inter-chunk scan ----
+    a_chunk = jnp.exp(cum[:, :, -1, :]).astype(xh.dtype)  # [B,NC,H]
+
+    def step(carry, inp):
+        st, ac = inp
+        new = carry * ac[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, s, p), xh.dtype)
+    final, prev = lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_chunk, 1, 0))
+    )
+    prev = jnp.moveaxis(prev, 0, 1)  # [B,NC,H,S,P]
+
+    into = jnp.exp(cum).astype(xh.dtype)  # decay chunk-start -> step (incl.)
+    y_inter = jnp.einsum(
+        "bnqgs,bnqgh,bnghsp->bnqghp",
+        c_c,
+        into.reshape(b, nc, q, g, hg),
+        prev.reshape(b, nc, g, hg, s, p),
+    ).reshape(b, nc, q, h, p)
+
+    y = (y_intra + y_inter).reshape(b, L, h, p)
+    return y, final
+
+
+def _gated_out(params, y: Array, z: Array, x_dtype):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)).astype(x_dtype)
+    y = y * params["norm_scale"].astype(x_dtype)
+    return y @ params["w_out"].astype(x_dtype)
+
+
+def _constrain_inner(t: Array, pctx) -> Array:
+    """Shard the SSD inner/head dim over the model axis (batch over DP)."""
+    if pctx is None or pctx.mesh is None or pctx.tp_axis is None:
+        return t
+    if t.shape[-1] % pctx.tp_size:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(pctx.mesh, P(pctx.dp_axes or None, None, pctx.tp_axis))
+    )
+
+
+def ssd_mixer(params, x: Array, cfg, *, return_state: bool = False, pctx=None):
+    """Full Mamba-2 block for train/prefill. x [B,L,D] -> [B,L,D]."""
+    d_in, h, p, s = ssd_dims(cfg)
+    g = cfg.ssm_n_groups
+    b, L, _ = x.shape
+
+    z = _constrain_inner(x @ params["w_z"].astype(x.dtype), pctx)
+    xc_pre = _constrain_inner(x @ params["w_x"].astype(x.dtype), pctx)
+    bc_pre = x @ params["w_bc"].astype(x.dtype)
+    dt = _constrain_inner(x @ params["w_dt"].astype(x.dtype), pctx)
+
+    xc = _depthwise_causal_conv(xc_pre, params["conv_x_w"], params["conv_x_b"])
+    bc = _depthwise_causal_conv(bc_pre, params["conv_bc_w"], params["conv_bc_b"])
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dtf)  # [B,L,H]
+
+    xh = (xc.reshape(b, L, h, p) * dtf[..., None].astype(x.dtype)).astype(x.dtype)
+    y, state = _ssd_chunked(xh, a, bmat.reshape(b, L, g, s), cmat.reshape(b, L, g, s),
+                            chunk=cfg.ssm_chunk)
+    y = y + params["d_skip"].astype(x.dtype)[None, None, :, None] * xc.reshape(b, L, h, p)
+    out = _gated_out(params, y.reshape(b, L, d_in), z, x.dtype)
+    if return_state:
+        k = cfg.ssm_conv_width
+        cx = jnp.pad(xc_pre, ((0, 0), (max(k - 1 - L, 0), 0), (0, 0)))[:, -(k - 1) :, :]
+        cbc = jnp.pad(bc_pre, ((0, 0), (max(k - 1 - L, 0), 0), (0, 0)))[:, -(k - 1) :, :]
+        return out, {
+            "ssd": state,
+            "conv_x": cx,
+            "conv_bc": cbc,
+            "pos": jnp.int32(L),
+        }
+    return out
+
+
+def ssd_cache_schema(cfg, batch: int):
+    d_in, h, p, s = ssd_dims(cfg)
+    g = cfg.ssm_n_groups
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k = cfg.ssm_conv_width
+    return {
+        "ssd": jax.ShapeDtypeStruct((batch, h, s, p), dt),
+        "conv_x": jax.ShapeDtypeStruct((batch, k - 1, d_in), dt),
+        "conv_bc": jax.ShapeDtypeStruct((batch, k - 1, 2 * g * s), dt),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def ssd_decode(params, x: Array, cache: Dict[str, Array], cfg):
+    """One-token decode. x [B,1,D]."""
+    d_in, h, p, s = ssd_dims(cfg)
+    g = cfg.ssm_n_groups
+    b = x.shape[0]
+    hg = h // g
+
+    z = x @ params["w_z"].astype(x.dtype)
+    xc_pre = x @ params["w_x"].astype(x.dtype)
+    bc_pre = x @ params["w_bc"].astype(x.dtype)
+    dt = x @ params["w_dt"].astype(x.dtype)
+
+    hist_x = jnp.concatenate([cache["conv_x"].astype(x.dtype), xc_pre], axis=1)
+    hist_bc = jnp.concatenate([cache["conv_bc"].astype(x.dtype), bc_pre], axis=1)
+    xc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist_x, params["conv_x_w"].astype(x.dtype))
+        + params["conv_x_b"].astype(x.dtype)
+    )
+    bc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist_bc, params["conv_bc_w"].astype(x.dtype))
+        + params["conv_bc_b"].astype(x.dtype)
+    )
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))[:, 0]
+    a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32)) * dtf)  # [B,H]
+
+    xh = (xc.reshape(b, h, p) * dtf[..., None].astype(x.dtype)).astype(x.dtype)
+    bh = jnp.repeat(bmat.reshape(b, g, s), hg, axis=1)
+    ch = jnp.repeat(cmat.reshape(b, g, s), hg, axis=1)
+    st = cache["ssd"].astype(x.dtype) * a[..., None, None].astype(x.dtype) + jnp.einsum(
+        "bhs,bhp->bhsp", bh, xh
+    )
+    y = jnp.einsum("bhs,bhsp->bhp", ch, st)
+    y = y + params["d_skip"].astype(x.dtype)[None, :, None] * xc.reshape(b, h, p)
+    out = _gated_out(params, y.reshape(b, 1, d_in), z, x.dtype)
+    new_cache = {
+        "ssd": st.astype(cache["ssd"].dtype),
+        "conv_x": hist_x[:, 1:, :].astype(cache["conv_x"].dtype),
+        "conv_bc": hist_bc[:, 1:, :].astype(cache["conv_bc"].dtype),
+        "pos": cache["pos"] + 1,
+    }
+    return out, new_cache

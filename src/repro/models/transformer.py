@@ -1,0 +1,520 @@
+"""Generic LM stack covering all assigned architecture families.
+
+One parameterised decoder-only stack supports:
+
+* dense transformers (qwen2.5, yi, granite, musicgen, pixtral backbones)
+* local:global interleaved attention (gemma3)
+* MoE (arctic, phi3.5) with EP all-to-all expert parallelism
+* attention-free SSM (mamba2, SSD) and hybrid RG-LRU + local attn
+  (recurrentgemma)
+* the paper's spiking mode (``cfg.spiking``): LIF feed-forward + SSA
+  stochastic spiking attention over spike trains of length ``cfg.spike_T``.
+
+Layers are grouped into *periods* (the block-pattern cycle) and scanned with
+``lax.scan`` so the HLO is O(1) in depth; the remainder (depth % period) is
+unrolled.  Every forward path (train loss, prefill, single-token decode) is
+pure-functional and jit/pjit-lowerable with abstract params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.layers import ParamDef
+from repro.models.moe import ParallelCtx
+from repro.core import spikes as SP
+from repro.core import ssa as SSA
+
+Array = jax.Array
+
+
+def model_dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+
+def block_schema(cfg: ModelConfig, mixer: str) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"norm1": L.norm_schema(cfg.d_model)}
+    if mixer in ("attn", "local"):
+        s["mixer"] = L.attention_schema(cfg)
+    elif mixer == "ssd":
+        s["mixer"] = S.ssd_schema(cfg)
+    elif mixer == "rglru":
+        s["mixer"] = R.rglru_schema(cfg)
+    else:
+        raise ValueError(mixer)
+    if cfg.d_ff > 0:
+        s["norm2"] = L.norm_schema(cfg.d_model)
+        if cfg.is_moe:
+            s["moe"] = M.moe_schema(cfg)
+            if cfg.moe_dense_ff > 0:
+                s["mlp"] = L.mlp_schema(cfg, cfg.moe_dense_ff)
+        else:
+            s["mlp"] = L.mlp_schema(cfg)
+    return s
+
+
+def _stack_defs(schema: Any, n: int) -> Any:
+    def f(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(
+            d,
+            shape=(n,) + d.shape,
+            axes=("layers",) + d.axes,
+            fan_in=d.shape[0] if len(d.shape) > 1 else None,
+        )
+
+    return jax.tree.map(f, schema, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def model_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    period = {f"blk{i}": block_schema(cfg, m) for i, m in enumerate(cfg.block_pattern)}
+    s: Dict[str, Any] = {
+        "embed": L.embed_schema(cfg),
+        "final_norm": L.norm_schema(cfg.d_model),
+    }
+    if cfg.num_periods > 0:
+        s["periods"] = _stack_defs(period, cfg.num_periods)
+    if cfg.remainder_layers:
+        s["remainder"] = {
+            f"blk{i}": block_schema(cfg, cfg.block_pattern[i])
+            for i in range(cfg.remainder_layers)
+        }
+    if not cfg.tie_embeddings:
+        s["unembed"] = L.unembed_schema(cfg)
+    if cfg.frontend != "none":
+        s["frontend"] = {
+            "proj": ParamDef((cfg.frontend_dim, cfg.d_model), (None, "embed"))
+        }
+    return s
+
+
+def init_params(key: Array, cfg: ModelConfig):
+    return L.init_tree(key, model_schema(cfg), model_dtype(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return L.abstract_tree(model_schema(cfg), model_dtype(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints
+# ---------------------------------------------------------------------------
+
+
+def shard_x(x: Array, pctx: ParallelCtx, *, seq_sharded: bool) -> Array:
+    if pctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    return lax.with_sharding_constraint(
+        x, NamedSharding(pctx.mesh, pctx.x_spec(seq_sharded))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conventional (ANN) block
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    params, x: Array, positions: Array, cfg: ModelConfig, pctx: ParallelCtx, mixer: str,
+    *, moe_impl: str, seq_sharded: bool,
+) -> Tuple[Array, Array]:
+    """Residual block: norm -> mixer -> +res ; norm -> ffn -> +res."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg.norm_type, params["norm1"], x)
+    if mixer == "attn":
+        h = L.attention(params["mixer"], h, positions, cfg)
+    elif mixer == "local":
+        h = L.attention(params["mixer"], h, positions, cfg, window=cfg.window_size)
+    elif mixer == "ssd":
+        h = S.ssd_mixer(params["mixer"], h, cfg, pctx=pctx)
+    elif mixer == "rglru":
+        h = R.rglru_mixer(params["mixer"], h, cfg, pctx=pctx)
+    x = shard_x(x + h, pctx, seq_sharded=seq_sharded)
+    if "norm2" in params:
+        h = L.apply_norm(cfg.norm_type, params["norm2"], x)
+        y = jnp.zeros_like(x)
+        if "moe" in params:
+            ym, aux = M.moe_apply(
+                params["moe"], h, cfg, pctx, impl=moe_impl, seq_sharded=seq_sharded
+            )
+            y = y + ym
+        if "mlp" in params:
+            y = y + L.mlp(params["mlp"], h, cfg)
+        x = shard_x(x + y, pctx, seq_sharded=seq_sharded)
+    return x, aux
+
+
+def _apply_block_decode(
+    params, x: Array, cache, cfg: ModelConfig, pctx: ParallelCtx, mixer: str, *, moe_impl: str
+):
+    h = L.apply_norm(cfg.norm_type, params["norm1"], x)
+    if mixer == "attn":
+        h, cache = L.attention_decode(params["mixer"], h, cache, cfg)
+    elif mixer == "local":
+        h, cache = L.attention_decode(params["mixer"], h, cache, cfg, window=cfg.window_size)
+    elif mixer == "ssd":
+        h, cache = S.ssd_decode(params["mixer"], h, cache, cfg)
+    elif mixer == "rglru":
+        h, cache = R.rglru_decode(params["mixer"], h, cache, cfg)
+    x = x + h
+    if "norm2" in params:
+        h = L.apply_norm(cfg.norm_type, params["norm2"], x)
+        y = jnp.zeros_like(x)
+        if "moe" in params:
+            ym, _ = M.moe_apply(
+                params["moe"], h, cfg, pctx, impl=moe_impl, seq_sharded=False
+            )
+            y = y + ym
+        if "mlp" in params:
+            y = y + L.mlp(params["mlp"], h, cfg)
+        x = x + y
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Spiking block (the paper's technique as a first-class mode)
+# ---------------------------------------------------------------------------
+
+
+def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array) -> Array:
+    """SSA attention over spike trains s [T,B,S,d] (paper Eq. 6)."""
+    T, b, n, d = s.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+
+    def proj(w):  # LIF(W s^t): spiking Q/K/V generation (Table I)
+        pre = jnp.einsum("tbnd,dhk->tbnhk", s, w.astype(s.dtype))
+        return SP.lif(pre.reshape(T, b, n, -1)).reshape(T, b, n, *pre.shape[3:])
+
+    q = proj(params["wq"])  # [T,B,S,H,hd]
+    k = proj(params["wk"])
+    v = proj(params["wv"])
+    if kv != h:  # GQA: repeat kv spike heads across the group
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=3)
+        v = jnp.repeat(v, rep, axis=3)
+    qh = jnp.moveaxis(q, 3, 2).reshape(T, b, h, n, hd)
+    kh = jnp.moveaxis(k, 3, 2).reshape(T, b, h, n, hd)
+    vh = jnp.moveaxis(v, 3, 2).reshape(T, b, h, n, hd)
+    if cfg.attention_kind == "lif":
+        a = SSA.lif_spiking_attention(qh, kh, vh, causal=True)
+    else:
+        a = SSA.ssa_attention(key, qh, kh, vh, causal=True)
+    a = jnp.moveaxis(a.reshape(T, b, h, n, hd), 2, 3).reshape(T, b, n, h * hd)
+    out = a @ params["wo"].astype(s.dtype).reshape(h * hd, -1)
+    # LIF on the output projection (spiking neuron tile semantics)
+    return SP.lif(out)
+
+
+def _spiking_mlp(params, s: Array, cfg: ModelConfig) -> Array:
+    """LIF(W2 LIF(W1 s^t)) — Table I feed-forward row."""
+    h = SP.spiking_linear(s, params["wi"], None)
+    return SP.spiking_linear(h, params["wo"], None)
+
+
+def _apply_block_spiking(
+    params, s: Array, cfg: ModelConfig, pctx: ParallelCtx, mixer: str, key: Array,
+) -> Tuple[Array, Array]:
+    """Spiking residual block over spike trains s [T,B,N,d].
+
+    Residuals add spike trains directly (integer-valued streams, as in
+    Spikformer/Xpikeformer — Table I: no inter-layer normalisation).
+    Attention-free mixers (ssd/rglru) run on the *rate* interface — the
+    paper's technique does not apply to them (DESIGN.md §Arch-applicability).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    k1, k2 = jax.random.split(key)
+    if mixer in ("attn", "local"):
+        h = _spiking_attention(params["mixer"], s, cfg, k1)
+    else:
+        rate = SP.rate_decode(s)  # [B,N,d]
+        if mixer == "ssd":
+            y = S.ssd_mixer(params["mixer"], rate, cfg)
+        else:
+            y = R.rglru_mixer(params["mixer"], rate, cfg)
+        h = SP.rate_encode(k1, jax.nn.sigmoid(y), s.shape[0])
+    s = s + h
+    if "norm2" in params:
+        if "moe" in params:
+            rate = SP.rate_decode(s)
+            ym, aux = M.moe_apply(params["moe"], rate, cfg, pctx, impl="dense")
+            y = SP.rate_encode(k2, jax.nn.sigmoid(ym), s.shape[0])
+        else:
+            y = _spiking_mlp(params["mlp"], s, cfg)
+        s = s + y
+    return s, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    dt = model_dtype(cfg)
+    if cfg.frontend != "none":
+        x = batch["embeddings"].astype(dt) @ params["frontend"]["proj"].astype(dt)
+    else:
+        x = L.embed(params["embed"], batch["tokens"], dt)
+    return x * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+
+
+def _unembed(params, x: Array, cfg: ModelConfig) -> Array:
+    x = L.apply_norm(cfg.norm_type, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].astype(x.dtype).T
+    return L.unembed(params["unembed"], x, cfg)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "block":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def forward(
+    params,
+    batch: Dict[str, Array],
+    cfg: ModelConfig,
+    pctx: ParallelCtx = ParallelCtx(),
+    *,
+    moe_impl: str = "ep_a2a",
+    remat: str = "block",
+    rng: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Train/prefill forward -> (logits [B,S,V], moe aux loss)."""
+    if cfg.spiking:
+        return _forward_spiking(params, batch, cfg, pctx, rng=rng)
+    x = _embed_inputs(params, batch, cfg)
+    b, sl, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32), (b, sl))
+    seq_ok = pctx.seq_shard and (pctx.tp_size > 1) and (sl % max(pctx.tp_size, 1) == 0)
+    x = shard_x(x, pctx, seq_sharded=seq_ok)
+    aux = jnp.zeros((), jnp.float32)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for i, mixer in enumerate(cfg.block_pattern):
+            x, a = _apply_block(
+                period_params[f"blk{i}"], x, positions, cfg, pctx, mixer,
+                moe_impl=moe_impl, seq_sharded=seq_ok,
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.num_periods > 0:
+        if L.EXACT_FLOPS_MODE:
+            # unrolled: every period's ops appear in the HLO (exact costs)
+            for pi in range(cfg.num_periods):
+                pp = jax.tree.map(lambda t: t[pi], params["periods"])
+                (x, aux), _ = period_body((x, aux), pp)
+        else:
+            body = _remat(period_body, remat)
+            (x, aux), _ = lax.scan(body, (x, aux), params["periods"])
+    if cfg.remainder_layers:
+        for i in range(cfg.remainder_layers):
+            x, a = _apply_block(
+                params["remainder"][f"blk{i}"], x, positions, cfg, pctx,
+                cfg.block_pattern[i], moe_impl=moe_impl, seq_sharded=seq_ok,
+            )
+            aux = aux + a
+    logits = _unembed(params, x, cfg)
+    return logits, aux
+
+
+def _forward_spiking(params, batch, cfg: ModelConfig, pctx: ParallelCtx, *, rng):
+    """Spiking forward: rate-encode, spiking blocks over T, rate-decode logits."""
+    assert rng is not None, "spiking forward needs an rng for Bernoulli coding"
+    x = _embed_inputs(params, batch, cfg)
+    k_enc, k_blocks = jax.random.split(rng)
+    s = SP.rate_encode(k_enc, jax.nn.sigmoid(x), cfg.spike_T)  # [T,B,S,d]
+    aux = jnp.zeros((), jnp.float32)
+
+    n_blocks = cfg.num_periods + (1 if cfg.remainder_layers else 0)
+    keys = jax.random.split(k_blocks, max(n_blocks, 1))
+
+    def period_body(carry, xs):
+        s, aux = carry
+        period_params, key = xs
+        kk = jax.random.split(key, cfg.period)
+        for i, mixer in enumerate(cfg.block_pattern):
+            s, a = _apply_block_spiking(period_params[f"blk{i}"], s, cfg, pctx, mixer, kk[i])
+            aux = aux + a
+        return (s, aux), None
+
+    if cfg.num_periods > 0:
+        (s, aux), _ = lax.scan(period_body, (s, aux), (params["periods"], keys[: cfg.num_periods]))
+    if cfg.remainder_layers:
+        kk = jax.random.split(keys[-1], cfg.remainder_layers)
+        for i in range(cfg.remainder_layers):
+            s, a = _apply_block_spiking(
+                params["remainder"][f"blk{i}"], s, cfg, pctx, cfg.block_pattern[i], kk[i]
+            )
+            aux = aux + a
+    # rate-decode the stream, then unembed (paper: loss on time-averaged output)
+    x = SP.rate_decode(s)
+    logits = _unembed(params, x, cfg)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Loss / train objective
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: Array, targets: Array, mask: Optional[Array] = None) -> Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(
+    params, batch, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
+    *, moe_impl: str = "ep_a2a", remat: str = "block", rng: Optional[Array] = None,
+    aux_weight: float = 0.01,
+) -> Tuple[Array, Dict[str, Array]]:
+    if cfg.frontend != "none":
+        inputs = {"embeddings": batch["embeddings"]}
+        targets = batch["targets"]
+        mask = batch.get("mask")
+    else:
+        inputs = {"tokens": batch["tokens"][:, :-1]}
+        targets = batch["tokens"][:, 1:]
+        mask = batch.get("mask")
+    logits, aux = forward(params, inputs, cfg, pctx, moe_impl=moe_impl, remat=remat, rng=rng)
+    xent = softmax_xent(logits, targets, mask)
+    loss = xent + aux_weight * aux
+    return loss, {"xent": xent, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_schema(cfg: ModelConfig, mixer: str, batch: int, seq_len: int):
+    if mixer == "attn":
+        return L.attention_cache_schema(cfg, batch, seq_len)
+    if mixer == "local":
+        return L.attention_cache_schema(cfg, batch, seq_len, window=cfg.window_size)
+    if mixer == "ssd":
+        return S.ssd_cache_schema(cfg, batch)
+    if mixer == "rglru":
+        return R.rglru_cache_schema(cfg, batch)
+    raise ValueError(mixer)
+
+
+def cache_schema(cfg: ModelConfig, batch: int, seq_len: int):
+    """Abstract (ShapeDtypeStruct) cache pytree for a full model."""
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+        )
+
+    out: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        period = {
+            f"blk{i}": _block_cache_schema(cfg, m, batch, seq_len)
+            for i, m in enumerate(cfg.block_pattern)
+        }
+        out["periods"] = stack(period, cfg.num_periods)
+    if cfg.remainder_layers:
+        out["remainder"] = {
+            f"blk{i}": _block_cache_schema(cfg, cfg.block_pattern[i], batch, seq_len)
+            for i in range(cfg.remainder_layers)
+        }
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, filled: int = 0):
+    """Materialise a zero cache; ``filled`` marks tokens as already present."""
+
+    def zero(s):
+        if s.shape == () and s.dtype == jnp.int32:
+            return jnp.int32(filled)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(zero, cache_schema(cfg, batch, seq_len))
+
+
+def decode_step(
+    params, cache, tokens: Array, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
+    *, moe_impl: str = "ep_a2a",
+):
+    """One decoding step. tokens [B,1] -> (logits [B,1,V], new cache)."""
+    dt = model_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dt) * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+
+    def period_body(x, xs):
+        period_params, period_cache = xs
+        new_cache = {}
+        for i, mixer in enumerate(cfg.block_pattern):
+            x, c = _apply_block_decode(
+                period_params[f"blk{i}"], x, period_cache[f"blk{i}"], cfg, pctx, mixer,
+                moe_impl=moe_impl,
+            )
+            new_cache[f"blk{i}"] = c
+        return x, new_cache
+
+    new_cache: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        if L.EXACT_FLOPS_MODE:
+            caches = []
+            for pi in range(cfg.num_periods):
+                pp = jax.tree.map(lambda t: t[pi], params["periods"])
+                pc = jax.tree.map(lambda t: t[pi], cache["periods"])
+                x, nc = period_body(x, (pp, pc))
+                caches.append(nc)
+            new_cache["periods"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *caches
+            )
+        else:
+            x, new_cache["periods"] = lax.scan(
+                period_body, x, (params["periods"], cache["periods"])
+            )
+    if cfg.remainder_layers:
+        rem = {}
+        for i in range(cfg.remainder_layers):
+            x, c = _apply_block_decode(
+                params["remainder"][f"blk{i}"], x, cache["remainder"][f"blk{i}"],
+                cfg, pctx, cfg.block_pattern[i], moe_impl=moe_impl,
+            )
+            rem[f"blk{i}"] = c
+        new_cache["remainder"] = rem
+    logits = _unembed(params, x, cfg)
+    return logits, new_cache
+
+
+def prefill(
+    params, batch, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
+    *, moe_impl: str = "ep_a2a",
+):
+    """Prefill forward returning logits (cache production handled by caller
+    via decode over the tail in serving; the dry-run lowers this as the
+    prefill workload)."""
+    return forward(params, batch, cfg, pctx, moe_impl=moe_impl, remat="none")

@@ -1,0 +1,249 @@
+"""Logical-axis sharding rules -> PartitionSpecs.
+
+Every parameter leaf carries logical axis names (ParamDef.axes).  This
+module maps them onto the production mesh ``(pod, data, model)``:
+
+* ``model``  — tensor parallelism: ffn/vocab/heads/experts/ssm-inner/lru,
+  and the sequence axis of activations / KV caches (sequence parallelism).
+* ``data``   — data parallelism for the batch; with FSDP enabled it also
+  shards the *minor* dimension of every large weight (ZeRO-3): e.g.
+  ``wi [d_model -> data, d_ff -> model]`` is 256-way sharded.
+* ``pod``    — inter-pod data parallelism only (batch).  Weights are
+  replicated across pods: cross-pod traffic is gradient all-reduce only,
+  matching the DCN/ICI bandwidth hierarchy.
+
+Rules are *candidate lists*: the first candidate whose mesh axes exist, are
+unused by earlier dims of the same tensor, and evenly divide the dim is
+taken; otherwise the dim is replicated.  This gives every architecture a
+well-defined layout even when a dim (e.g. qwen's 40 heads or a 49155-entry
+vocab) does not divide the 16-way axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamDef
+from repro.models import transformer as T
+
+# logical axis -> ordered candidates, each a tuple of mesh axes
+RULES: Dict[str, Tuple[Tuple[str, ...], ...]] = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (("model",),),
+    "vocab": (("model",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "head_dim": (),  # never sharded (small; avoids score all-reduces)
+    "ffn": (("model",),),
+    "experts": (("model",),),
+    "experts_r": (),
+    "expert_embed": (),
+    "expert_ffn": (("data",),),  # expert tensor-parallel (2-D EP), FSDP-gated
+    "ssm_inner": (("model",),),
+    "ssm_heads": (("model",),),
+    "ssm_conv": (("model",),),
+    "lru": (("model",),),
+    "lru_in": (),
+    "layers": (),  # scan axis
+    "embed": (("data",),),  # FSDP (ZeRO-3) minor-dim shard, gated on fsdp
+}
+
+_FSDP_GATED = {"embed", "expert_ffn"}
+
+
+def axis_sizes(mesh: Optional[Mesh]) -> Dict[str, int]:
+    if mesh is None:
+        return {}
+    shape = mesh.shape  # works for Mesh and AbstractMesh alike
+    if isinstance(shape, dict):
+        return dict(shape)
+    return dict(zip(mesh.axis_names, shape))
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Optional[Mesh],
+    *,
+    fsdp: bool = True,
+    overrides: Optional[Dict[str, Tuple[Tuple[str, ...], ...]]] = None,
+) -> P:
+    """Map one tensor's logical axes to a PartitionSpec."""
+    if mesh is None:
+        return P()
+    sizes = axis_sizes(mesh)
+    used: set = set()
+    out = []
+    rules = dict(RULES)
+    if overrides:
+        rules.update(overrides)
+    for name, dim in zip(axes, shape):
+        picked = None
+        if name is not None and not (name in _FSDP_GATED and not fsdp):
+            for cand in rules.get(name, ()):
+                if not all(a in sizes for a in cand):
+                    continue
+                if any(a in used for a in cand):
+                    continue
+                prod = int(np.prod([sizes[a] for a in cand]))
+                if prod > 1 and dim % prod == 0:
+                    picked = cand
+                    used.update(cand)
+                    break
+        out.append(picked if picked is None else (picked[0] if len(picked) == 1 else picked))
+    # trim trailing Nones for readability
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# small-model layout: replicate every weight, spread the batch over the
+# whole mesh — at 256 chips a <1B model is latency-bound, not memory-bound
+PURE_DP_OVERRIDES = {
+    "vocab": (), "heads": (), "kv_heads": (), "ffn": (), "experts": (),
+    "expert_ffn": (), "ssm_inner": (), "ssm_heads": (), "ssm_conv": (),
+    "lru": (), "embed": (), "seq": (),
+}
+
+
+def param_pspecs(cfg, mesh: Optional[Mesh], *, fsdp: bool = True, pure_dp: bool = False):
+    """PartitionSpec pytree parallel to model params."""
+    schema = T.model_schema(cfg)
+    overrides = PURE_DP_OVERRIDES if pure_dp else None
+
+    def f(d: ParamDef) -> P:
+        return spec_for(d.axes, d.shape, mesh, fsdp=fsdp, overrides=overrides)
+
+    return jax.tree.map(f, schema, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_shardings(cfg, mesh: Optional[Mesh], *, fsdp: bool = True):
+    specs = param_pspecs(cfg, mesh, fsdp=fsdp)
+    if mesh is None:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def _div(n: int, axes: Tuple[str, ...], sizes: Dict[str, int]) -> bool:
+    prod = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    return prod > 0 and n % prod == 0
+
+
+def batch_pspec(mesh: Optional[Mesh], batch: int, *, pure_dp: bool = False) -> Any:
+    if mesh is None:
+        return P()
+    sizes = axis_sizes(mesh)
+    cands = RULES["batch"]
+    if pure_dp:
+        cands = (
+            ("pod", "data", "model"), ("data", "model"),
+        ) + cands
+    for cand in cands:
+        if all(a in sizes for a in cand) and _div(batch, cand, sizes):
+            return cand[0] if len(cand) == 1 else cand
+    return None
+
+
+def tokens_pspec(mesh: Optional[Mesh], batch: int) -> P:
+    return P(batch_pspec(mesh, batch))
+
+
+def cache_pspecs(cfg, mesh: Optional[Mesh], batch: int, seq_len: int):
+    """PartitionSpec tree parallel to transformer.cache_schema.
+
+    KV caches are sharded batch -> (pod, data) and *sequence -> model*
+    (distributed flash-decode: softmax/normalisation over a sharded length
+    axis is handled by GSPMD with small per-step all-reduces).  SSM / LRU
+    states shard their head/width dims over ``model``.
+    """
+    if mesh is None:
+        return jax.tree.map(lambda _: P(), T.cache_schema(cfg, batch, seq_len))
+    sizes = axis_sizes(mesh)
+    b = batch_pspec(mesh, batch)
+
+    def block_spec(mixer: str):
+        if mixer in ("attn", "local"):
+            L = min(cfg.window_size, seq_len) if mixer == "local" else seq_len
+            s = "model" if ("model" in sizes and L % sizes["model"] == 0) else None
+            kd = None
+            return {
+                "k": P(b, s, kd, None),
+                "v": P(b, s, kd, None),
+                "pos": P(),
+            }
+        if mixer == "ssd":
+            h = "model" if ("model" in sizes) else None
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_head_dim
+            h = h if (h and nh % sizes["model"] == 0) else None
+            ci = "model" if ("model" in sizes and d_in % sizes["model"] == 0) else None
+            return {
+                "ssd": P(b, h, None, None),
+                "conv_x": P(b, None, ci),
+                "conv_bc": P(b, None, None),
+                "pos": P(),
+            }
+        if mixer == "rglru":
+            w = cfg.rglru_width or cfg.d_model
+            ws = "model" if ("model" in sizes and w % sizes["model"] == 0) else None
+            return {
+                "h": P(b, ws),
+                "conv": P(b, None, ws),
+                "pos": P(),
+            }
+        raise ValueError(mixer)
+
+    def stack(tree):
+        return jax.tree.map(lambda s: P(None, *s), tree, is_leaf=lambda x: isinstance(x, P))
+
+    out: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        period = {f"blk{i}": block_spec(m) for i, m in enumerate(cfg.block_pattern)}
+        out["periods"] = stack(period)
+    if cfg.remainder_layers:
+        out["remainder"] = {
+            f"blk{i}": block_spec(cfg.block_pattern[i])
+            for i in range(cfg.remainder_layers)
+        }
+    return out
+
+
+def to_shardings(tree, mesh: Optional[Mesh]):
+    if mesh is None:
+        return tree
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def make_pctx(mesh: Optional[Mesh], parallel) -> "Any":
+    from repro.models.moe import ParallelCtx
+
+    if mesh is None:
+        return ParallelCtx()
+    names = mesh.axis_names
+    if getattr(parallel, "pure_dp", False):
+        return ParallelCtx(
+            mesh=mesh,
+            dp_axes=tuple(a for a in ("pod", "data", "model") if a in names),
+            fsdp_axis=None,
+            tp_axis=None,
+            seq_shard=False,
+        )
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    return ParallelCtx(
+        mesh=mesh,
+        dp_axes=dp,
+        fsdp_axis="data" if (parallel.fsdp and "data" in names) else None,
+        tp_axis="model" if "model" in names else None,
+        seq_shard=parallel.seq_shard,
+    )

@@ -1,0 +1,107 @@
+"""Two-stage Xpikeformer training (paper §V-A): CT then HWAT.
+
+1. Conventional training (CT): ideal full-precision forward/backward with
+   surrogate gradients for the spiking nonlinearities.
+2. Hardware-aware training (HWAT): quantisation + PCM programming noise
+   injected in the forward pass (straight-through), backward stays ideal.
+
+Generic over the paper models (ViT / GPT): caller supplies a
+``forward(params, inputs, sim, rng) -> logits`` and a loss adapter.
+AdamW is reused from optim/ (paper trains with AdamW [52]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spiking_transformer import AIMCSim
+from repro.optim import adamw as A
+
+Array = jax.Array
+
+
+def xent_loss(logits: Array, labels: Array, mask: Optional[Array] = None) -> Array:
+    lf = logits.astype(jnp.float32)
+    nll = jax.nn.logsumexp(lf, -1) - jnp.take_along_axis(
+        lf, labels[..., None], axis=-1
+    )[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_step(forward: Callable, opt: A.AdamWConfig, sim: AIMCSim):
+    def loss_fn(params, batch, rng):
+        logits = forward(params, batch, sim, rng)
+        return xent_loss(logits, batch["labels"], batch.get("mask"))
+
+    @jax.jit
+    def step(params, opt_state, batch, rng):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+        params, opt_state, m = A.apply_updates(params, grads, opt_state, opt)
+        return params, opt_state, loss
+
+    return step
+
+
+def train_stage(
+    params,
+    forward: Callable,
+    data_fn: Callable[[Array], Dict[str, Array]],
+    *,
+    steps: int,
+    sim: AIMCSim,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 0,
+):
+    """Run one training stage; data_fn(key) -> batch."""
+    opt = A.AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 1), total_steps=steps,
+                        weight_decay=0.01, grad_clip=1.0)
+    opt_state = A.init_opt_state(params, opt)
+    step = make_step(forward, opt, sim)
+    key = jax.random.PRNGKey(seed)
+    losses = []
+    for i in range(steps):
+        kd, kf = jax.random.split(jax.random.fold_in(key, i))
+        batch = data_fn(kd)
+        params, opt_state, loss = step(params, opt_state, batch, kf)
+        losses.append(float(loss))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"  step {i:4d} loss {float(loss):.4f}", flush=True)
+    return params, losses
+
+
+def two_stage_train(
+    params,
+    forward: Callable,
+    data_fn: Callable,
+    *,
+    ct_steps: int,
+    hwat_steps: int,
+    aimc_cfg=None,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 0,
+):
+    """CT (ideal) then HWAT (noisy forward).  Returns (params, loss curves)."""
+    from repro.core.aimc import AIMCConfig
+
+    cfg = aimc_cfg or AIMCConfig()
+    params, l1 = train_stage(
+        params, forward, data_fn, steps=ct_steps,
+        sim=AIMCSim(wmode="ideal", cfg=cfg), lr=lr, seed=seed, log_every=log_every,
+    )
+    l2 = []
+    if hwat_steps > 0:
+        params, l2 = train_stage(
+            params, forward, data_fn, steps=hwat_steps,
+            sim=AIMCSim(wmode="hwat", cfg=cfg), lr=lr * 0.3, seed=seed + 1,
+            log_every=log_every,
+        )
+    return params, {"ct": l1, "hwat": l2}

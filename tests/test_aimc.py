@@ -1,0 +1,71 @@
+"""AIMC simulation tests: quantisation, noise, drift, GDC, HWAT."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aimc as AM
+
+
+CFG = AM.AIMCConfig()
+
+
+def test_quantisation_error_bounded(rng):
+    w = jax.random.normal(rng, (64, 32)) * 0.1
+    scale = AM.column_scale(w, CFG)
+    lv = AM.quantize_levels(w, scale, CFG)
+    err = jnp.abs(lv * scale - w)
+    assert float(jnp.max(err / jnp.maximum(scale, 1e-9))) <= 0.5 + 1e-6
+
+
+def test_program_and_ideal_inference_close(rng):
+    cfg = AM.AIMCConfig(prog_noise_sigma=0.0, read_noise_sigma=0.0)
+    w = jax.random.normal(rng, (256, 64)) * 0.1
+    hw = AM.program_weights(rng, w, cfg)
+    x = (jax.random.uniform(jax.random.fold_in(rng, 1), (8, 256)) < 0.4).astype(jnp.float32)
+    out = AM.aimc_matmul(None, x, hw, cfg, t_seconds=0.0)
+    ideal = x @ w
+    # only quantisation (5-bit weights + 5-bit ADC) separates them
+    assert float(jnp.mean(jnp.abs(out - ideal))) < 0.25 * float(jnp.std(ideal))
+
+
+def test_drift_decays_conductance(rng):
+    w = jnp.abs(jax.random.normal(rng, (32, 16))) * 0.1
+    hw = AM.program_weights(rng, w, CFG)
+    g0 = jnp.sum(jnp.abs(AM.effective_weights(hw, 0.0, CFG)))
+    g1 = jnp.sum(jnp.abs(AM.effective_weights(hw, 3.15e7, CFG)))
+    assert float(g1) < float(g0)
+
+
+def test_gdc_restores_scale(rng):
+    w = jax.random.normal(rng, (256, 64)) * 0.1
+    cfg = AM.AIMCConfig(prog_noise_sigma=0.0, read_noise_sigma=0.0)
+    hw = AM.program_weights(rng, w, cfg)
+    x = (jax.random.uniform(jax.random.fold_in(rng, 1), (16, 256)) < 0.4).astype(jnp.float32)
+    year = 3.15e7
+    out_nc = AM.aimc_matmul(None, x, hw, cfg, t_seconds=year, gdc=False)
+    out_gdc = AM.aimc_matmul(None, x, hw, cfg, t_seconds=year, gdc=True)
+    ideal = x @ w
+    err_nc = float(jnp.mean(jnp.abs(out_nc - ideal)))
+    err_gdc = float(jnp.mean(jnp.abs(out_gdc - ideal)))
+    assert err_gdc < err_nc  # GDC recovers the global drift factor
+
+
+def test_hwat_weights_straight_through_grad(rng):
+    w = jax.random.normal(rng, (32, 16)) * 0.1
+    g = jax.grad(lambda ww: AM.hwat_weights(rng, ww, CFG).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(np.asarray(g)), rtol=1e-6)
+
+
+def test_row_block_mapping_matches_unblocked(rng):
+    """Accumulating per-128-row-block partial sums == full matmul (no ADC)."""
+    # ADC step of exactly 1.0 level: integer partial sums pass through exact
+    cfg = AM.AIMCConfig(prog_noise_sigma=0.0, read_noise_sigma=0.0, adc_bits=16,
+                        adc_fullscale_rows=(2 ** 16 - 1) / (2 * 15))
+    w = jax.random.normal(rng, (300, 40)) * 0.05
+    hw = AM.program_weights(rng, w, cfg)
+    x = (jax.random.uniform(jax.random.fold_in(rng, 2), (4, 300)) < 0.5).astype(jnp.float32)
+    out = AM.aimc_matmul(None, x, hw, cfg)
+    expect = x @ (hw["levels"] * hw["scale"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-4, atol=1e-4)

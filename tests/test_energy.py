@@ -1,0 +1,62 @@
+"""Energy/latency/area model must reproduce the paper's reported numbers."""
+
+import pytest
+
+from repro.energy.model import (Workload, all_designs, area_xpikeformer_mm2,
+                                energy_xpikeformer, latency_xpikeformer_ms, total)
+
+W = Workload(depth=8, dim=768, tokens=196, T_xpike=7, T_snn=4, classes=1000)
+
+
+def test_fig8_ratios_vit_8_768():
+    d = all_designs(W)
+    tx = total(d["Xpikeformer"])
+    assert 9.6 <= total(d["ANN-Quant"]) / tx <= 13.5  # paper: 9.6-13x
+    assert 4.5 <= total(d["ANN-Quant+AIMC"]) / tx <= 6.2  # paper: 5.4-5.9x
+    assert 1.7 <= total(d["SNN-Digi-Opt"]) / tx <= 2.1  # paper: 1.8-1.9x
+
+
+def test_table6_absolute_numbers():
+    e = total(energy_xpikeformer(W)) / 1e9
+    assert 0.25 <= e <= 0.37  # paper: 0.30 mJ
+    lat = latency_xpikeformer_ms(W)["total_ms"]
+    assert 1.9 <= lat <= 2.5  # paper: 2.18 ms
+    params = 8 * (4 * 768 * 768 + 8 * 768 * 768) + 768 * 1000
+    area = area_xpikeformer_mm2(W, params)["total_mm2"]
+    assert 700 <= area <= 870  # paper: 784 mm^2
+
+
+def test_fig9_breakdown():
+    e = energy_xpikeformer(W)
+    tc = e["compute"]
+    aimc = sum(e["aimc_breakdown"].values())
+    assert abs(aimc / tc - 0.784) < 0.05
+    assert abs(e["ssa"] / tc - 0.189) < 0.05
+    ab = e["aimc_breakdown"]
+    assert abs(ab["periphery"] / aimc - 0.859) < 0.05
+    assert abs(ab["adc"] / aimc - 0.020) < 0.02
+
+
+def test_fig10_breakdown_and_speedups():
+    lat = latency_xpikeformer_ms(W)
+    assert lat["periphery_frac"] > 0.9
+    assert lat["aimc_frac"] < 0.01
+    assert 0.01 < lat["ssa_frac"] < 0.04
+    from repro.energy import constants as C
+
+    ann_speedup = C.GPU_ANN_VIT_8_768_MS / lat["total_ms"]
+    assert 1.9 <= ann_speedup <= 2.5  # paper: 2.18x
+    snn_speedup = ann_speedup * C.GPU_SNN_SLOWDOWN
+    assert 6.0 <= snn_speedup <= 7.6  # paper: 6.85x
+
+
+def test_energy_scales_with_T():
+    import dataclasses
+
+    hi = dataclasses.replace(W, T_xpike=14)
+    assert total(energy_xpikeformer(hi)) > total(energy_xpikeformer(W))
+
+
+def test_memory_energy_ann_equals_aimc():
+    d = all_designs(W)
+    assert d["ANN-Quant"]["memory"] == d["ANN-Quant+AIMC"]["memory"]

@@ -1,0 +1,115 @@
+"""Layer tests: flash/banded attention equivalence, RoPE, decode parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+CFG = ModelConfig(
+    name="t", family="dense", num_layers=1, d_model=32, num_heads=4,
+    num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64, dtype="float32",
+)
+
+
+def _qkv_rand(key, b, s, h, kvh, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    return q, k, v
+
+
+def test_flash_matches_masked_einsum(rng):
+    q, k, v = _qkv_rand(rng, 2, 2048, 4, 2, 16)
+    ref = L._sdpa(q, k, v, L.causal_mask(2048, 2048)[None, None, None], 0.0)
+    out = L._flash_attention(q, k, v, 0.0, blk=512)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_with_softcap(rng):
+    q, k, v = _qkv_rand(rng, 1, 2048, 2, 2, 16)
+    ref = L._sdpa(q, k, v, L.causal_mask(2048, 2048)[None, None, None], 30.0)
+    out = L._flash_attention(q, k, v, 30.0, blk=1024)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_banded_matches_window_mask(rng):
+    q, k, v = _qkv_rand(rng, 2, 1024, 4, 2, 16)
+    w = 128
+    ref = L._sdpa(q, k, v, L.window_mask(1024, 1024, w)[None, None, None], 0.0)
+
+    class C:
+        attn_softcap = 0.0
+
+    out = L._banded_local(q, k, v, C, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_rope_relative_property(rng):
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    d = 16
+    q = jax.random.normal(rng, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, d))
+
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.array([[i]]), 10000.0)
+        kj = L.apply_rope(k, jnp.array([[j]]), 10000.0)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-4
+
+
+def test_attention_decode_matches_prefill(rng):
+    """Step-by-step decode with KV cache == teacher-forced full attention."""
+    b, s = 2, 12
+    params = L.init_tree(rng, L.attention_schema(CFG), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, CFG.d_model))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = L.attention(params, x, positions, CFG)
+
+    cache = jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype) if sd.shape != () else jnp.int32(0),
+        L.attention_cache_schema(CFG, b, s),
+    )
+    outs = []
+    for i in range(s):
+        y, cache = L.attention_decode(params, x[:, i : i + 1], cache, CFG)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4)
+
+
+def test_local_attention_decode_ring_buffer(rng):
+    b, s, w = 1, 10, 4
+    params = L.init_tree(rng, L.attention_schema(CFG), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 3), (b, s, CFG.d_model))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = L.attention(params, x, positions, CFG, window=w)
+    cache = jax.tree.map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype) if sd.shape != () else jnp.int32(0),
+        L.attention_cache_schema(CFG, b, s, window=w),
+    )
+    outs = []
+    for i in range(s):
+        y, cache = L.attention_decode(params, x[:, i : i + 1], cache, CFG, window=w)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4)
+
+
+def test_gqa_grouping(rng):
+    q, k, v = _qkv_rand(rng, 1, 8, 4, 2, 8)
+    out = L._sdpa(q, k, v, L.causal_mask(8, 8)[None, None, None], 0.0)
+    assert out.shape == (1, 8, 4, 8)
+
+
+def test_mlp_gated(rng):
+    params = L.init_tree(rng, L.mlp_schema(CFG), jnp.float32)
+    x = jax.random.normal(rng, (2, 3, CFG.d_model))
+    out = L.mlp(params, x, CFG)
+    assert out.shape == x.shape

@@ -1,0 +1,74 @@
+"""Unit + property tests for spike coding, LIF, and Bernoulli neurons."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spikes as SP
+
+
+def test_rate_encode_statistics(rng):
+    x = jnp.linspace(0.0, 1.0, 11)
+    s = SP.rate_encode(rng, x, T=4096, straight_through=False)
+    rates = jnp.mean(s, axis=0)
+    np.testing.assert_allclose(rates, x, atol=0.03)
+
+
+def test_rate_encode_clips(rng):
+    x = jnp.array([-0.5, 1.5])
+    s = SP.rate_encode(rng, x, T=512, straight_through=False)
+    assert float(jnp.mean(s[:, 0])) == 0.0
+    assert float(jnp.mean(s[:, 1])) == 1.0
+
+
+def test_lif_fires_and_resets():
+    # constant current 0.6, beta 0.5, thresh 1.0:
+    # v: 0.6, 0.9, 1.05 -> fire+reset, 0.6, 0.9, 1.05 -> fire ...
+    cur = jnp.full((9, 1), 0.6)
+    out = SP.lif(cur)
+    np.testing.assert_array_equal(out[:, 0], [0, 0, 1, 0, 0, 1, 0, 0, 1])
+
+
+def test_lif_never_fires_below_threshold():
+    cur = jnp.full((50, 1), 0.4)  # fixed point v* = 0.8 < 1.0
+    assert float(SP.lif(cur).sum()) == 0.0
+
+
+def test_heaviside_surrogate_gradient():
+    g = jax.grad(lambda v: SP.heaviside_st(v, 2.0).sum())(jnp.array([0.5, -0.5]))
+    assert (g > 0).all()  # fast-sigmoid surrogate is positive everywhere
+
+
+def test_bernoulli_st_gradient_is_identity():
+    p = jnp.array([0.3, 0.7])
+    u = jnp.array([0.5, 0.5])
+    g = jax.grad(lambda pp: SP.bernoulli_st(pp, u).sum())(p)
+    np.testing.assert_array_equal(g, jnp.ones_like(p))
+
+
+@settings(deadline=None, max_examples=20)
+@given(count=st.integers(0, 64), imax=st.sampled_from([16, 32, 64]))
+def test_bnl_integer_probability(count, imax):
+    """P(spike) == count/imax exactly (hardware comparator semantics)."""
+    count = min(count, imax)
+    key = jax.random.PRNGKey(count * 131 + imax)
+    counts = jnp.full((4096,), count, jnp.int32)
+    s = SP.bnl_integer(key, counts, imax)
+    rate = float(jnp.mean(s))
+    assert abs(rate - count / imax) < 0.05
+
+
+def test_split_prn_bytes():
+    w = jnp.array([0x04030201], jnp.uint32)
+    b = SP.split_prn_bytes(w)
+    np.testing.assert_array_equal(np.asarray(b[0]), [1, 2, 3, 4])
+
+
+def test_spiking_linear_carries_membrane(rng):
+    spikes = jnp.ones((4, 2, 8))
+    w = jnp.full((8, 3), 0.1)  # per-step current 0.8: v = .8, 1.2 -> fires
+    out = SP.spiking_linear(spikes, w, None)
+    assert out.shape == (4, 2, 3)
+    np.testing.assert_array_equal(np.asarray(out[:, 0, 0]), [0, 1, 0, 1])

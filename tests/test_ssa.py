@@ -1,0 +1,88 @@
+"""SSA algorithm tests: convergence to rate product, causality, baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spikes as SP
+from repro.core import ssa as SSA
+
+
+def _rates(key, shape):
+    return jax.random.uniform(key, shape)
+
+
+def test_ssa_integer_converges_to_rate(rng):
+    """Property at the heart of Eq. (6): rate(SSA) -> clipped rate product."""
+    b, h, n, d = 2, 2, 16, 32
+    ks = jax.random.split(rng, 4)
+    qr, kr, vr = (_rates(k, (b, h, n, d)) for k in ks[:3])
+    expected = SSA.ssa_attention_rate(qr, kr, vr)
+    errs = []
+    for T in (8, 128):
+        kk = jax.random.fold_in(ks[3], T)
+        enc = jax.random.split(kk, 4)
+        q = SP.rate_encode(enc[0], qr, T, straight_through=False).astype(jnp.int32)
+        k = SP.rate_encode(enc[1], kr, T, straight_through=False).astype(jnp.int32)
+        v = SP.rate_encode(enc[2], vr, T, straight_through=False).astype(jnp.int32)
+        out = SSA.ssa_attention_integer(enc[3], q, k, v)
+        errs.append(float(jnp.mean(jnp.abs(out.astype(jnp.float32).mean(0) - expected))))
+    assert errs[1] < errs[0]  # more timesteps -> closer to the rate product
+    assert errs[1] < 0.06
+
+
+def test_ssa_causal_no_future_leak(rng):
+    t, b, h, n, d = 4, 1, 1, 8, 32
+    ks = jax.random.split(rng, 4)
+    q = jax.random.bernoulli(ks[0], 0.5, (t, b, h, n, d)).astype(jnp.int32)
+    k1 = jax.random.bernoulli(ks[1], 0.5, (t, b, h, n, d)).astype(jnp.int32)
+    v1 = jax.random.bernoulli(ks[2], 0.5, (t, b, h, n, d)).astype(jnp.int32)
+    # perturb ONLY the last token of k/v: outputs at tokens < n-1 must not move
+    k2 = k1.at[..., -1, :].set(1 - k1[..., -1, :])
+    v2 = v1.at[..., -1, :].set(1 - v1[..., -1, :])
+    o1 = SSA.ssa_attention_integer(ks[3], q, k1, v1, causal=True)
+    o2 = SSA.ssa_attention_integer(ks[3], q, k2, v2, causal=True)
+    np.testing.assert_array_equal(np.asarray(o1[..., :-1, :]), np.asarray(o2[..., :-1, :]))
+
+
+def test_ssa_differentiable(rng):
+    t, b, h, n, d = 2, 1, 1, 4, 8
+    ks = jax.random.split(rng, 3)
+
+    def loss(x):
+        q = SP.rate_encode(ks[0], jax.nn.sigmoid(x), t)
+        out = SSA.ssa_attention(ks[1], q, q, q)
+        return jnp.sum(out)
+
+    g = jax.grad(loss)(jax.random.normal(ks[2], (b, h, n, d)))
+    assert jnp.isfinite(g).all()
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_lif_attention_baseline_shape(rng):
+    t, b, h, n, d = 3, 2, 2, 8, 16
+    q = jax.random.bernoulli(rng, 0.4, (t, b, h, n, d)).astype(jnp.float32)
+    out = SSA.lif_spiking_attention(q, q, q, causal=True)
+    assert out.shape == (t, b, h, n, d)
+    assert set(np.unique(np.asarray(out))) <= {0.0, 1.0}
+
+
+def test_ann_attention_matches_softmax(rng):
+    b, h, n, d = 1, 1, 6, 8
+    ks = jax.random.split(rng, 3)
+    q, k, v = (jax.random.normal(kk, (b, h, n, d)) for kk in ks)
+    out = SSA.ann_attention(q, k, v, causal=False)
+    w = jax.nn.softmax(jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(d * 1.0), axis=-1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jnp.einsum("bhnm,bhmd->bhnd", w, v)), rtol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.sampled_from([4, 8]), d=st.sampled_from([8, 16]), t=st.integers(1, 4))
+def test_ssa_shapes_property(n, d, t):
+    key = jax.random.PRNGKey(n * 100 + d + t)
+    q = jax.random.bernoulli(key, 0.5, (t, 1, 1, n, d)).astype(jnp.int32)
+    out = SSA.ssa_attention_integer(key, q, q, q)
+    assert out.shape == (t, 1, 1, n, d)
+    assert out.dtype == jnp.uint8

@@ -1,0 +1,132 @@
+"""Per-arch smoke tests (REQUIRED: reduced config of the same family, one
+forward/train step on CPU, shape + no-NaN assertions) plus decode parity
+and spiking-mode integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, shape_applicable
+from repro.configs.registry import ARCHS, cells, reduced_config
+from repro.models import transformer as T
+from repro.models.frontends import synth_frontend_batch
+from repro.models.moe import ParallelCtx
+from repro.optim import adamw as A
+
+
+PCTX = ParallelCtx()
+
+
+def _batch_for(cfg, key, b=2, s=16):
+    if cfg.frontend != "none":
+        return synth_frontend_batch(key, cfg, b, s)
+    return {"tokens": jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size, jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch, rng):
+    """One full forward + backward + optimizer step on the reduced config."""
+    cfg = reduced_config(arch)
+    params = T.init_params(rng, cfg)
+    batch = _batch_for(cfg, jax.random.fold_in(rng, 1))
+
+    def loss_f(p):
+        loss, m = T.loss_fn(p, batch, cfg, PCTX, moe_impl="dense", remat="none")
+        return loss
+
+    loss, grads = jax.value_and_grad(loss_f)(params)
+    assert jnp.isfinite(loss), f"{arch}: NaN loss"
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gn) and float(gn) > 0, f"{arch}: bad grads"
+    opt = A.AdamWConfig(lr=1e-3)
+    state = A.init_opt_state(params, opt)
+    new_params, state, m = A.apply_updates(params, grads, state, opt)
+    assert jnp.isfinite(m["grad_norm"])
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_decode_shapes(arch, rng):
+    cfg = reduced_config(arch)
+    params = T.init_params(rng, cfg)
+    cache = T.init_cache(cfg, 2, 32)
+    logits, cache2 = T.decode_step(params, cache, jnp.zeros((2, 1), jnp.int32), cfg,
+                                   PCTX, moe_impl="dense")
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all(), f"{arch}: NaN decode logits"
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "gemma3-27b", "recurrentgemma-9b", "mamba2-780m"])
+def test_decode_matches_forward(arch, rng):
+    """Teacher-forced decode logits == full forward logits (cache parity)."""
+    cfg = reduced_config(arch)
+    params = T.init_params(rng, cfg)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.fold_in(rng, 2), (b, s), 0, cfg.vocab_size)
+    full, _ = T.forward(params, {"tokens": tokens}, cfg, PCTX, moe_impl="dense",
+                        remat="none")
+    cache = T.init_cache(cfg, b, s)
+    outs = []
+    for i in range(s):
+        lg, cache = T.decode_step(params, cache, tokens[:, i : i + 1], cfg, PCTX,
+                                  moe_impl="dense")
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32), np.asarray(full, np.float32),
+                               atol=5e-3)
+
+
+def test_spiking_mode_forward(rng):
+    """The paper's technique as a first-class mode of the generic LM."""
+    import dataclasses
+
+    cfg = dataclasses.replace(reduced_config("yi-9b"), spiking=True, spike_T=4,
+                              attention_kind="ssa")
+    params = T.init_params(rng, cfg)
+    batch = {"tokens": jax.random.randint(rng, (2, 9), 0, cfg.vocab_size, jnp.int32)}
+    loss, m = T.loss_fn(params, batch, cfg, PCTX, moe_impl="dense", remat="none",
+                        rng=jax.random.fold_in(rng, 7))
+    assert jnp.isfinite(loss)
+    g = jax.grad(lambda p: T.loss_fn(p, batch, cfg, PCTX, moe_impl="dense",
+                                     remat="none", rng=rng)[0])(params)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_spiking_mode_lif_attention(rng):
+    import dataclasses
+
+    cfg = dataclasses.replace(reduced_config("granite-3-8b"), spiking=True, spike_T=3,
+                              attention_kind="lif")
+    params = T.init_params(rng, cfg)
+    batch = {"tokens": jax.random.randint(rng, (1, 9), 0, cfg.vocab_size, jnp.int32)}
+    loss, _ = T.loss_fn(params, batch, cfg, PCTX, moe_impl="dense", remat="none", rng=rng)
+    assert jnp.isfinite(loss)
+
+
+def test_cells_enumeration():
+    all_cells = cells(include_skipped=True)
+    runnable = [c for c in all_cells if c[2]]
+    skipped = [c for c in all_cells if not c[2]]
+    assert len(all_cells) == 40
+    assert len(runnable) == 33
+    assert {c[0].name for c in skipped} == {
+        "arctic-480b", "phi3.5-moe-42b-a6.6b", "musicgen-medium", "pixtral-12b",
+        "qwen2.5-32b", "yi-9b", "granite-3-8b",
+    }
+
+
+def test_remainder_layers_used(rng):
+    """gemma3 (62 = 10x6 + 2) must route through remainder params."""
+    cfg = reduced_config("gemma3-27b")
+    assert cfg.remainder_layers > 0
+    params = T.init_params(rng, cfg)
+    assert "remainder" in params
+    batch = _batch_for(cfg, rng)
+
+    def loss_of(p):
+        return T.loss_fn(p, batch, cfg, PCTX, moe_impl="dense", remat="none")[0]
+
+    g = jax.grad(loss_of)(params)
+    rem_g = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g["remainder"]))
+    assert rem_g > 0  # remainder blocks get gradient
