@@ -1,0 +1,73 @@
+"""End-to-end backend benchmark: full spiking model forwards per substrate.
+
+    PYTHONPATH=src python benchmarks/backend_forward.py [--arch xpikeformer-vit-smoke]
+
+The point of the unified engine API is that the Pallas kernels sit on the
+model hot path — so they can be timed (and later TPU-profiled) through the
+exact code the tasks run, not through synthetic per-kernel shapes.  On this
+CPU container the pallas backend runs in interpret mode, which times the
+correctness path only; compiled-kernel timing needs a TPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.xpikeformer import SPIKING_ARCHS
+from repro.data.icl_mimo import MIMOConfig, sample_batch as mimo_batch
+from repro.engine import BACKENDS, XpikeformerEngine
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us, like kernels_micro
+
+
+def _inputs(task: str, batch: int, key):
+    if task == "vit":
+        return jax.random.uniform(key, (batch, 16, 16, 3))
+    return mimo_batch(key, MIMOConfig(), batch)["features"]
+
+
+def run(arch: str = "xpikeformer-vit-smoke", batch: int = 4, fast: bool = True):
+    if not fast:  # --full: paper-scale smallest ViT instead of smoke
+        arch = "xpikeformer-vit-4-384" if "vit" in arch else arch
+    task, _ = SPIKING_ARCHS[arch]
+    key = jax.random.PRNGKey(0)
+    x = _inputs(task, batch, jax.random.fold_in(key, 1))
+    rng = jax.random.fold_in(key, 2)
+    rows = []
+    params = None
+    for backend in sorted(BACKENDS):
+        eng = XpikeformerEngine.from_config(arch, backend=backend)
+        if params is None:
+            params = eng.init(key)
+        eng.params = params
+        fwd = eng.jit_forward()
+        us = _time(lambda xx: fwd(params, xx, rng), x)
+        rows.append((f"engine/{task}-forward[{backend}]", us,
+                     f"arch={arch} B={batch}"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xpikeformer-vit-smoke",
+                    choices=sorted(SPIKING_ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    a = ap.parse_args(argv)
+    for name, us, note in run(a.arch, a.batch):
+        print(f"{name:44s} {us:12.1f} us   {note}")
+
+
+if __name__ == "__main__":
+    main()

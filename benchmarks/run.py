@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.fig10_latency",
     "benchmarks.table6_sota",
     "benchmarks.kernels_micro",
+    "benchmarks.backend_forward",
     "benchmarks.roofline",
     "benchmarks.table4_icl_ber",
     "benchmarks.table3_image_cls",

@@ -20,6 +20,7 @@ from repro.core.aimc import AIMCConfig
 from repro.core.spiking_transformer import (AIMCSim, SpikingConfig, gpt_forward,
                                             init_gpt, program_model)
 from repro.data.icl_mimo import MIMOConfig, ber, sample_batch
+from repro.engine import XpikeformerEngine
 from repro.train.hwat import two_stage_train
 
 
@@ -28,6 +29,9 @@ def main():
     ap.add_argument("--paper", action="store_true", help="paper-scale 4-256 model")
     ap.add_argument("--antennas", type=int, default=2, choices=[2, 4])
     ap.add_argument("--T", type=int, default=6)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "integer", "pallas"],
+                    help="compute backend for deployment-time inference")
     args = ap.parse_args()
 
     mcfg = MIMOConfig(n_tx=args.antennas, n_rx=args.antennas)
@@ -51,13 +55,21 @@ def main():
 
     test = sample_batch(jax.random.PRNGKey(777), mcfg, 512)
     hw = program_model(jax.random.PRNGKey(42), params, acfg)
+    if args.backend != "reference":
+        print("  note: PCM drift/GDC are analog effects modeled only by the "
+              "reference backend; drifted rows run on it, deploy (t=0) on "
+              f"--backend {args.backend}")
     for label, t, gdc in (("deploy (t=0)", 0.0, True),
                           ("1 year, no GDC", 3.15e7, False),
                           ("1 year, GDC", 3.15e7, True)):
-        sim = AIMCSim(wmode="hw", cfg=acfg, t_seconds=t, gdc=gdc)
-        logits = gpt_forward(hw, test["features"], gcfg, sim, jax.random.PRNGKey(5))
+        backend = args.backend if t == 0.0 else "reference"
+        eng = XpikeformerEngine.from_config(gcfg, task="gpt", backend=backend,
+                                            wmode="hw", aimc_cfg=acfg,
+                                            t_seconds=t, gdc=gdc)
+        eng.params = hw
+        logits = eng.forward(test["features"], jax.random.PRNGKey(5))
         b = float(ber(logits, test["labels"], test["mask"], mcfg))
-        print(f"  BER [{label:16s}] = {b:.4f}")
+        print(f"  BER [{label:16s}, {backend}] = {b:.4f}")
 
 
 if __name__ == "__main__":

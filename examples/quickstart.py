@@ -1,11 +1,15 @@
 """Quickstart: the framework in 60 seconds.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --arch xpikeformer-gpt-4-256
 
-1. Pick an assigned architecture (--arch, default yi-9b) at smoke scale.
+1. Pick an assigned architecture (--arch, default yi-9b) at smoke scale —
+   the paper's own decoders are registered as xpikeformer-gpt-*.
 2. Train it for 30 steps on the deterministic synthetic LM stream.
 3. Decode 16 tokens with the KV cache.
 4. Show the spiking (Xpikeformer) mode of the same architecture.
+5. Run the paper's spiking ViT through the unified XpikeformerEngine on
+   every compute backend (reference / integer / pallas).
 """
 
 import argparse
@@ -65,6 +69,19 @@ def main():
         loss, _ = T.loss_fn(sparams, batch, scfg, pctx, moe_impl="dense",
                             remat="none", rng=key)
         print(f"  spiking (SSA, T=4) forward loss: {float(loss):.4f}")
+
+    # --- unified engine: one model, pluggable compute backends ---
+    from repro.engine import XpikeformerEngine
+
+    print("== XpikeformerEngine: spiking ViT on all backends ==")
+    images = jax.random.uniform(jax.random.fold_in(key, 7), (4, 16, 16, 3))
+    eparams = None
+    for backend in ("reference", "integer", "pallas"):
+        eng = XpikeformerEngine.from_config("xpikeformer-vit-smoke", backend=backend)
+        eparams = eng.init(key) if eparams is None else eparams
+        eng.params = eparams
+        labels = eng.classify(images, jax.random.fold_in(key, 8))
+        print(f"  backend={backend:9s} predictions: {list(map(int, labels))}")
     print("done.")
 
 

@@ -16,6 +16,7 @@ from repro.configs import (
     pixtral_12b,
     qwen25_32b,
     recurrentgemma_9b,
+    xpikeformer,
     yi_9b,
 )
 from repro.configs.base import ModelConfig, SHAPES, ShapeConfig, shape_applicable
@@ -33,6 +34,11 @@ ARCHS: Dict[str, ModelConfig] = {
         gemma3_27b.CONFIG,
         granite_3_8b.CONFIG,
         recurrentgemma_9b.CONFIG,
+        # the paper's spiking GPT decoders on the generic LM stack
+        # (spiking=True + SSA attention): --arch xpikeformer-gpt-* works
+        # in train/serve/quickstart like any other arch
+        xpikeformer.GPT_4_256,
+        xpikeformer.GPT_8_512,
     )
 }
 

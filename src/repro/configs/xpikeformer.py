@@ -1,13 +1,24 @@
 """Xpikeformer paper-scale configs (Tables III & IV).
 
-* ViT encoders 4-384 / 6-512 / 8-768 (image classification) — built by
-  ``core/spiking_transformer.py`` (encoder, patch embed, CLS pooling).
-* GPT decoders 4-256 / 8-512 (ICL wireless symbol detection) — expressed on
-  the generic LM stack with ``spiking=True`` and SSA attention, which is
-  exactly Table I's Xpikeformer column.
+Two families, two config types:
+
+* ``SPIKING_ARCHS`` — the paper models run by the
+  :class:`repro.engine.XpikeformerEngine` (spiking ViT encoders 4-384 /
+  6-512 / 8-768 for image classification, spiking GPT decoders 4-256 /
+  8-512 for ICL wireless symbol detection), each with a ``-smoke`` variant
+  sized for CPU tests.  Values are ``(task, SpikingConfig)``.
+
+* ``xpikeformer_gpt`` — the same GPT decoders expressed on the generic LM
+  stack (``models/transformer.py`` with ``spiking=True`` + SSA attention,
+  exactly Table I's Xpikeformer column) so they register in
+  ``configs/registry.py`` and work with ``--arch xpikeformer-gpt-*`` in the
+  training/serving launchers.
 """
 
+from typing import Dict, Tuple
+
 from repro.configs.base import ModelConfig
+from repro.core.spiking_transformer import SpikingConfig
 
 
 def xpikeformer_gpt(depth: int, dim: int, *, vocab: int, T: int = 4, spiking: bool = True,
@@ -35,3 +46,47 @@ def xpikeformer_gpt(depth: int, dim: int, *, vocab: int, T: int = 4, spiking: bo
 
 GPT_4_256 = xpikeformer_gpt(4, 256, vocab=64)
 GPT_8_512 = xpikeformer_gpt(8, 512, vocab=64)
+
+
+# ---------------------------------------------------------------------------
+# Engine archs: the paper models (core/spiking_transformer.py)
+# ---------------------------------------------------------------------------
+
+# ICL MIMO symbol-detection input interface (2x2 antennas, QPSK):
+# feat_dim = 2*n_rx + n_classes, vocab = n_classes (data/icl_mimo.py).
+_MIMO_FEAT_DIM = 2 * 2 + 16
+_MIMO_CLASSES = 16
+
+
+def _vit(depth: int, dim: int, *, T: int = 4, image_size: int = 32,
+         patch_size: int = 4, num_classes: int = 10) -> SpikingConfig:
+    return SpikingConfig(
+        depth=depth, dim=dim, num_heads=max(dim // 64, 2), T=T, mode="ssa",
+        image_size=image_size, patch_size=patch_size, num_classes=num_classes,
+    )
+
+
+def _gpt(depth: int, dim: int, *, T: int = 4) -> SpikingConfig:
+    return SpikingConfig(
+        depth=depth, dim=dim, num_heads=max(dim // 64, 2), T=T, mode="ssa",
+        input_dim=_MIMO_FEAT_DIM, vocab=_MIMO_CLASSES,
+    )
+
+
+SPIKING_ARCHS: Dict[str, Tuple[str, SpikingConfig]] = {
+    # paper scales (Tables III / IV)
+    "xpikeformer-vit-4-384": ("vit", _vit(4, 384)),
+    "xpikeformer-vit-6-512": ("vit", _vit(6, 512)),
+    "xpikeformer-vit-8-768": ("vit", _vit(8, 768)),
+    "xpikeformer-gpt-4-256": ("gpt", _gpt(4, 256)),
+    "xpikeformer-gpt-8-512": ("gpt", _gpt(8, 512)),
+    # reduced scales for CPU smoke tests / quickstarts
+    "xpikeformer-vit-smoke": (
+        "vit", _vit(1, 32, T=3, image_size=16, patch_size=4)
+    ),
+    "xpikeformer-gpt-smoke": ("gpt", _gpt(1, 32, T=3)),
+}
+
+# default aliases
+SPIKING_ARCHS["xpikeformer-vit"] = SPIKING_ARCHS["xpikeformer-vit-4-384"]
+SPIKING_ARCHS["xpikeformer-gpt"] = SPIKING_ARCHS["xpikeformer-gpt-4-256"]

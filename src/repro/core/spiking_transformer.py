@@ -22,6 +22,13 @@ and one of three weight-execution modes (AIMCSim):
                   ideal backward (hardware-aware training, stage 2)
   wmode="hw"    — programmed PCM state with drift at time t + optional GDC
                   (long-term inference, Fig. 7 / Table V)
+
+The spiking primitives (SSA attention, LIF, spiking linear) are taken from
+a pluggable compute backend (``repro.engine``): the differentiable float
+reference, the bit-faithful integer hardware oracle, or the bit-packed
+Pallas kernels.  ``vit_forward``/``gpt_forward`` default to the reference
+backend for backward compatibility; prefer driving these models through
+``repro.engine.XpikeformerEngine``.
 """
 
 from __future__ import annotations
@@ -160,28 +167,39 @@ def _ann_block(p, x, cfg: SpikingConfig, sim, keys, *, causal):
     return x + linear(p["w2"], h, sim, keys[5])
 
 
-def _spiking_block(p, s, cfg: SpikingConfig, sim, keys, rng, *, causal):
-    """s [T,B,N,D] binary. Table I SNN rows; no inter-layer normalisation."""
-    T = s.shape[0]
+def _default_backend():
+    from repro.engine import ReferenceBackend  # deferred: engine imports us
+
+    return ReferenceBackend()
+
+
+def _spiking_block(p, s, cfg: SpikingConfig, sim, keys, rng, *, causal, backend):
+    """s [T,B,N,D] binary. Table I SNN rows; no inter-layer normalisation.
+
+    Every spiking primitive is taken from ``backend`` (reference float ops,
+    bit-faithful integer simulation, or the bit-packed Pallas kernels), so
+    one block definition serves every substrate."""
 
     def sp_lin(pp, z, kk):  # LIF(W z^t): per-timestep crossbar MVM + LIF
-        pre = jax.vmap(lambda zt: linear(pp, zt, sim, kk))(z)
-        return SP.lif(pre)
+        return backend.spiking_linear(kk, pp, z, sim)
 
     q = _heads(sp_lin(p["wq"], s, keys[0]), cfg.num_heads)  # [T,B,H,N,hd]
     k = _heads(sp_lin(p["wk"], s, keys[1]), cfg.num_heads)
     v = _heads(sp_lin(p["wv"], s, keys[2]), cfg.num_heads)
     if cfg.mode == "ssa":
-        a = SSA.ssa_attention(rng, q, k, v, causal=causal)
+        a = backend.ssa_attention(rng, q, k, v, causal=causal)
     else:  # "lif" — Spikformer baseline
-        a = SSA.lif_spiking_attention(q, k, v, causal=causal)
+        a = SSA.lif_spiking_attention(
+            q.astype(s.dtype), k.astype(s.dtype), v.astype(s.dtype), causal=causal
+        )
     a = _unheads(a)
     s = s + sp_lin(p["wo"], a, keys[3])
     h = sp_lin(p["w1"], s, keys[4])
     return s + sp_lin(p["w2"], h, keys[5])
 
 
-def _run_blocks(params, x_or_s, cfg: SpikingConfig, sim, rng, *, causal):
+def _run_blocks(params, x_or_s, cfg: SpikingConfig, sim, rng, *, causal, backend=None):
+    backend = backend or _default_backend()
     n_keys = 6
     for i, bp in enumerate(params["blocks"]):
         kk = jax.random.split(jax.random.fold_in(rng, i), n_keys + 1)
@@ -189,7 +207,8 @@ def _run_blocks(params, x_or_s, cfg: SpikingConfig, sim, rng, *, causal):
             x_or_s = _ann_block(bp, x_or_s, cfg, sim, kk[:n_keys], causal=causal)
         else:
             x_or_s = _spiking_block(
-                bp, x_or_s, cfg, sim, kk[:n_keys], kk[n_keys], causal=causal
+                bp, x_or_s, cfg, sim, kk[:n_keys], kk[n_keys], causal=causal,
+                backend=backend,
             )
     return x_or_s
 
@@ -217,8 +236,15 @@ def patchify(images: Array, patch: int) -> Array:
     return jnp.moveaxis(x, 3, 2).reshape(b, ph * pw, patch * patch * c)
 
 
-def vit_forward(params, images: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Array) -> Array:
-    """images [B,H,W,C] -> logits [B, classes]."""
+def vit_forward(params, images: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Array,
+                *, backend=None) -> Array:
+    """images [B,H,W,C] -> logits [B, classes].
+
+    ``backend`` selects the compute substrate for the spiking blocks (see
+    ``repro.engine``); None means the differentiable reference backend.
+    The patch embed and classifier head stay on the shared float path —
+    they consume/produce real values, not spike trains — so spike-level
+    backends remain bit-comparable."""
     k_embed, k_enc, k_blocks, k_head = jax.random.split(rng, 4)
     x = patchify(images, cfg.patch_size)
     x = linear(params["patch"], x, sim, k_embed) + params["pos"]
@@ -227,8 +253,8 @@ def vit_forward(params, images: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Ar
         pooled = jnp.mean(h, axis=1)
     else:
         s = SP.rate_encode(k_enc, jax.nn.sigmoid(x), cfg.T)
-        s = _run_blocks(params, s, cfg, sim, k_blocks, causal=False)
-        pooled = jnp.mean(SP.rate_decode(s), axis=1)
+        s = _run_blocks(params, s, cfg, sim, k_blocks, causal=False, backend=backend)
+        pooled = jnp.mean(SP.rate_decode(s.astype(jnp.float32)), axis=1)
     return linear(params["head"], pooled, sim, k_head)
 
 
@@ -247,8 +273,12 @@ def init_gpt(key: Array, cfg: SpikingConfig):
     }
 
 
-def gpt_forward(params, feats: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Array) -> Array:
-    """feats [B,L,input_dim] -> logits [B,L,vocab] (causal)."""
+def gpt_forward(params, feats: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Array,
+                *, backend=None) -> Array:
+    """feats [B,L,input_dim] -> logits [B,L,vocab] (causal).
+
+    ``backend`` selects the compute substrate for the spiking blocks (see
+    ``repro.engine``); None means the differentiable reference backend."""
     k_embed, k_enc, k_blocks, k_head = jax.random.split(rng, 4)
     L = feats.shape[1]
     x = linear(params["embed"], feats, sim, k_embed) + params["pos"][:L]
@@ -256,6 +286,6 @@ def gpt_forward(params, feats: Array, cfg: SpikingConfig, sim: AIMCSim, rng: Arr
         h = _run_blocks(params, x, cfg, sim, k_blocks, causal=True)
     else:
         s = SP.rate_encode(k_enc, jax.nn.sigmoid(x), cfg.T)
-        s = _run_blocks(params, s, cfg, sim, k_blocks, causal=True)
-        h = SP.rate_decode(s)
+        s = _run_blocks(params, s, cfg, sim, k_blocks, causal=True, backend=backend)
+        h = SP.rate_decode(s.astype(jnp.float32))
     return linear(params["head"], h, sim, k_head)

@@ -76,8 +76,11 @@ def ssa_attention(
         s_t = bernoulli_st(p_s, u_s)
         # output: [B, H, N, d] counts / N
         counts_a = jnp.einsum("bhnm,bhmd->bhnd", s_t, vt)
-        denom = jnp.arange(1, N + 1, dtype=p_s.dtype)[:, None] if causal else float(N)
-        p_a = counts_a / denom if causal else counts_a / denom
+        # The output BNL comparator has a fixed range I_max = N (§IV-B-2): the
+        # hardware draws r ~ U{0..N-1} regardless of how many keys a causal
+        # row can see, so the reference divides by N in causal mode too —
+        # keeping it distribution-identical to ``ssa_attention_integer``.
+        p_a = counts_a / float(N)
         p_a = jnp.clip(p_a, 0.0, 1.0)
         u_a = jax.random.uniform(kk[1], p_a.shape, dtype=p_a.dtype)
         return bernoulli_st(p_a, u_a)

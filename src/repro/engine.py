@@ -1,0 +1,394 @@
+"""Unified Xpikeformer engine: one model API, pluggable compute backends.
+
+The paper's central claim is that a *single* spiking transformer runs on
+interchangeable substrates — GPU float math for training, a bit-faithful
+integer simulation of the SSA/AIMC hardware, and the accelerated engine
+itself.  This module makes that a first-class API instead of three
+disconnected code paths:
+
+* :class:`Backend` — the protocol every substrate implements: the three
+  spiking primitive ops the models are built from (``ssa_attention``,
+  ``lif``, ``spiking_linear``).
+* ``"reference"``  — differentiable float ops + straight-through Bernoulli
+  samplers; the only backend that models the AIMC *analog* non-idealities
+  (HWAT noise, PCM drift, read noise, GDC).  Use for training and for the
+  paper's drift/BER studies.
+* ``"integer"``    — bit-faithful integer simulation of the digital SSA
+  engine + 5-bit quantised crossbars (the hardware oracle).  Deterministic
+  given a key; not differentiable.
+* ``"pallas"``     — the bit-packed Pallas TPU kernels (popcount SSA,
+  fused-membrane LIF, fused crossbar-MVM + LIF), with packing and padding
+  absorbed inside the backend.  Bit-exact against ``"integer"`` given the
+  same key.
+* :class:`XpikeformerEngine` — facade over the paper models (spiking ViT
+  and spiking GPT): ``from_config`` / ``init`` / ``forward`` / ``program``
+  (PCM programming) / ``classify`` / ``detect_symbols``.
+
+Quick start::
+
+    from repro.engine import XpikeformerEngine
+    eng = XpikeformerEngine.from_config("xpikeformer-vit-smoke", backend="pallas")
+    params = eng.init(jax.random.PRNGKey(0))
+    logits = eng.forward(images, jax.random.PRNGKey(1))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aimc as AM
+from repro.core import spikes as SP
+from repro.core import ssa as SSA
+from repro.core import spiking_transformer as ST
+from repro.core.spiking_transformer import AIMCSim, SpikingConfig
+from repro.kernels import ops as KOPS
+from repro.kernels import ref as KREF
+
+Array = jax.Array
+
+_IDEAL_SIM = AIMCSim()  # wmode="ideal": plain float weights
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """A compute substrate for the three spiking primitives.
+
+    ``p`` in :meth:`spiking_linear` is a linear-layer param leaf in any of
+    the model formats: ``{"w", "b"}`` (float weights), ``{"hw", "b"}``
+    (programmed PCM state from :func:`repro.core.spiking_transformer.
+    program_model`), or a bare weight array.
+    """
+
+    name: str
+    differentiable: bool
+    bit_exact: bool
+
+    def ssa_attention(self, key: Array, q: Array, k: Array, v: Array, *,
+                      causal: bool = False) -> Array:
+        """Stochastic spiking attention over ``[T,B,H,N,d]`` spike trains."""
+        ...
+
+    def lif(self, currents: Array, *, beta: float = 0.5,
+            v_thresh: float = 1.0) -> Array:
+        """LIF neuron over a ``[T, ...]`` current sequence."""
+        ...
+
+    def spiking_linear(self, key: Optional[Array], p: Any, spikes: Array,
+                       sim: Optional[AIMCSim] = None) -> Array:
+        """``LIF(W s^t + b)`` over a ``[T, ..., d_in]`` spike train."""
+        ...
+
+
+def _linear_parts(p: Any) -> Dict[str, Any]:
+    """Normalise a linear param leaf to ``{"w"|"hw", "b"}`` form."""
+    if isinstance(p, dict):
+        return p
+    return {"w": p, "b": None}
+
+
+def _levels_scale(p: Dict[str, Any], sim: AIMCSim):
+    """Integer conductance levels + per-column scale for a linear leaf.
+
+    Programmed PCM state carries its levels/scale; float weights are
+    quantised on the fly with the sim's AIMC config.  The *analog*
+    programming error / drift in the hw state are deliberately not applied
+    here: the integer and pallas backends model the digital datapath of the
+    SSA engine (quantised levels, exact popcount/CSA accumulation) — analog
+    non-idealities belong to the reference backend's AIMC simulation.
+    """
+    if "hw" in p:
+        return p["hw"]["levels"].astype(jnp.int8), p["hw"]["scale"]
+    w = p["w"]
+    scale = AM.column_scale(w, sim.cfg)
+    levels = AM.quantize_levels(w, scale, sim.cfg).astype(jnp.int8)
+    return levels, scale
+
+
+def _flatten_time(spikes: Array):
+    """[T, *lead, d_in] -> ([T, M, d_in], unflatten)"""
+    t = spikes.shape[0]
+    lead = spikes.shape[1:-1]
+    d_in = spikes.shape[-1]
+    flat = spikes.reshape(t, -1, d_in)
+
+    def unflatten(out: Array) -> Array:
+        return out.reshape((t,) + lead + (out.shape[-1],))
+
+    return flat, unflatten
+
+
+# ---------------------------------------------------------------------------
+# Reference backend — differentiable float path (training)
+# ---------------------------------------------------------------------------
+
+
+class ReferenceBackend:
+    """Float ops + straight-through Bernoulli/Heaviside surrogates.
+
+    The only backend usable under ``jax.grad``; also the only one that
+    applies the AIMC *analog* simulation (wmode="hwat"/"hw": programming
+    noise, read noise, drift, GDC)."""
+
+    name = "reference"
+    differentiable = True
+    bit_exact = False
+
+    def ssa_attention(self, key, q, k, v, *, causal=False):
+        return SSA.ssa_attention(key, q, k, v, causal=causal)
+
+    def lif(self, currents, *, beta=0.5, v_thresh=1.0):
+        return SP.lif(currents, SP.LIFParams(beta=beta, v_thresh=v_thresh))
+
+    def spiking_linear(self, key, p, spikes, sim=None):
+        sim = sim or _IDEAL_SIM
+        p = _linear_parts(p)
+        if "hw" in p:  # programmed PCM state: full analog crossbar sim
+            pre = jax.vmap(
+                lambda zt: AM.aimc_matmul(
+                    key, zt, p["hw"], sim.cfg, t_seconds=sim.t_seconds, gdc=sim.gdc
+                )
+            )(spikes)
+        else:
+            w = p["w"]
+            if sim.wmode == "hwat":
+                assert key is not None
+                w = AM.hwat_weights(key, w, sim.cfg)
+            pre = jax.vmap(lambda zt: zt @ w)(spikes)
+        if p.get("b") is not None:
+            pre = pre + p["b"]
+        return SP.lif(pre)
+
+
+# ---------------------------------------------------------------------------
+# Integer backend — bit-faithful hardware oracle
+# ---------------------------------------------------------------------------
+
+
+class IntegerBackend:
+    """Bit-faithful integer simulation of the SSA engine's digital datapath.
+
+    Draws the comparator PRNs with the exact convention the pallas backend
+    uses (:func:`repro.kernels.ops.draw_comparator_prns`), so the two are
+    bit-identical given the same key — this backend is the correctness
+    contract the kernels are validated against."""
+
+    name = "integer"
+    differentiable = False
+    bit_exact = True
+
+    def ssa_attention(self, key, q, k, v, *, causal=False):
+        t, b, h, n, d = q.shape
+        g = t * b * h
+        rs, ra = KOPS.draw_comparator_prns(key, (g, n, n), (g, n, d), d, n)
+        out = KREF.ssa_attention_ref(
+            q.reshape(g, n, d), k.reshape(g, n, d), v.reshape(g, n, d),
+            rs, ra, causal=causal,
+        )
+        return out.reshape(t, b, h, n, d)
+
+    def lif(self, currents, *, beta=0.5, v_thresh=1.0):
+        t = currents.shape[0]
+        flat = currents.astype(jnp.float32).reshape(t, -1)
+        out = KREF.lif_ref(flat, beta=beta, v_thresh=v_thresh)
+        return out.reshape(currents.shape)
+
+    def spiking_linear(self, key, p, spikes, sim=None):
+        sim = sim or _IDEAL_SIM
+        p = _linear_parts(p)
+        levels, scale = _levels_scale(p, sim)
+        flat, unflatten = _flatten_time(spikes)
+        out = KREF.aimc_spiking_linear_ref(
+            flat.astype(jnp.float32), levels, scale, p.get("b")
+        )
+        return unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend — bit-packed TPU kernels on the model hot path
+# ---------------------------------------------------------------------------
+
+
+class PallasBackend:
+    """The accelerated engine: popcount SSA + fused LIF/crossbar kernels.
+
+    ``interpret=True`` executes the kernel bodies through the Pallas
+    interpreter (exact semantics, runs on CPU); on TPU pass
+    ``interpret=False`` for the compiled kernels.  Packing to uint32 lanes
+    and padding to kernel block multiples happen inside the backend —
+    callers hand over plain ``[T,B,H,N,d]`` / ``[T,...,d_in]`` spike
+    trains."""
+
+    name = "pallas"
+    differentiable = False
+    bit_exact = True
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    def ssa_attention(self, key, q, k, v, *, causal=False):
+        return KOPS.ssa_attention_packed(
+            q, k, v, key, causal=causal, interpret=self.interpret
+        )
+
+    def lif(self, currents, *, beta=0.5, v_thresh=1.0):
+        return KOPS.lif_fused(
+            currents.astype(jnp.float32), beta=beta, v_thresh=v_thresh,
+            interpret=self.interpret,
+        )
+
+    def spiking_linear(self, key, p, spikes, sim=None):
+        sim = sim or _IDEAL_SIM
+        p = _linear_parts(p)
+        levels, scale = _levels_scale(p, sim)
+        flat, unflatten = _flatten_time(spikes)
+        out = KOPS.aimc_spiking_linear(
+            flat.astype(jnp.float32), levels, scale, p.get("b"),
+            interpret=self.interpret,
+        )
+        return unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+BACKENDS = {
+    "reference": ReferenceBackend,
+    "integer": IntegerBackend,
+    "pallas": PallasBackend,
+}
+
+
+def register_backend(name: str, factory) -> None:
+    """Register a custom backend factory under ``name``."""
+    BACKENDS[name] = factory
+
+
+def get_backend(spec: Union[str, Backend, None], **kwargs) -> Backend:
+    """Resolve a backend name (or pass an instance through)."""
+    if spec is None:
+        return ReferenceBackend()
+    if isinstance(spec, str):
+        if spec not in BACKENDS:
+            raise KeyError(f"unknown backend {spec!r}; known: {sorted(BACKENDS)}")
+        return BACKENDS[spec](**kwargs)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Engine facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class XpikeformerEngine:
+    """One handle over the paper's models across all compute substrates.
+
+    Built via :meth:`from_config` from a registered arch name (see
+    ``repro.configs.xpikeformer.SPIKING_ARCHS``) or a raw
+    :class:`SpikingConfig`.  Holds the model params after :meth:`init` /
+    :meth:`program` so task-level helpers (:meth:`classify`,
+    :meth:`detect_symbols`) are one-liners, but every method also accepts
+    explicit ``params`` for functional use.
+    """
+
+    cfg: SpikingConfig
+    task: str  # "vit" | "gpt"
+    backend: Backend
+    sim: AIMCSim
+    params: Any = None
+
+    # -- construction --------------------------------------------------
+
+    @classmethod
+    def from_config(
+        cls,
+        name_or_cfg: Union[str, SpikingConfig],
+        *,
+        task: Optional[str] = None,
+        backend: Union[str, Backend] = "reference",
+        wmode: str = "ideal",
+        aimc_cfg: Optional[AM.AIMCConfig] = None,
+        t_seconds: float = 0.0,
+        gdc: bool = True,
+        **backend_kwargs,
+    ) -> "XpikeformerEngine":
+        if isinstance(name_or_cfg, str):
+            from repro.configs.xpikeformer import SPIKING_ARCHS
+
+            if name_or_cfg not in SPIKING_ARCHS:
+                raise KeyError(
+                    f"unknown engine arch {name_or_cfg!r}; "
+                    f"known: {sorted(SPIKING_ARCHS)}"
+                )
+            task_, cfg = SPIKING_ARCHS[name_or_cfg]
+            task = task or task_
+        else:
+            cfg = name_or_cfg
+            if task is None:
+                task = "gpt" if cfg.input_dim > 0 else "vit"
+        sim = AIMCSim(
+            wmode=wmode, cfg=aimc_cfg or AM.AIMCConfig(),
+            t_seconds=t_seconds, gdc=gdc,
+        )
+        return cls(cfg=cfg, task=task, backend=get_backend(backend, **backend_kwargs),
+                   sim=sim)
+
+    # -- lifecycle -----------------------------------------------------
+
+    def init(self, key: Array):
+        """Initialise (and store) model params."""
+        init = ST.init_vit if self.task == "vit" else ST.init_gpt
+        self.params = init(key, self.cfg)
+        return self.params
+
+    def program(self, key: Array, params: Any = None):
+        """Program the float weights onto simulated PCM crossbars.
+
+        Replaces every linear leaf by its programmed hardware state and
+        switches the sim to long-term inference mode (wmode="hw")."""
+        params = self.params if params is None else params
+        assert params is not None, "call init() first or pass params"
+        self.params = ST.program_model(key, params, self.sim.cfg)
+        self.sim = dataclasses.replace(self.sim, wmode="hw")
+        return self.params
+
+    # -- forward -------------------------------------------------------
+
+    def forward(self, x: Array, rng: Array, params: Any = None) -> Array:
+        """Full model forward: images -> class logits (vit) or feature
+        sequences -> per-token symbol logits (gpt)."""
+        params = self.params if params is None else params
+        assert params is not None, "call init() first or pass params"
+        fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
+        return fwd(params, x, self.cfg, self.sim, rng, backend=self.backend)
+
+    def jit_forward(self):
+        """A jitted pure function ``(params, x, rng) -> logits`` over the
+        engine's (cfg, sim, backend) — for serving / benchmarking loops."""
+        fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
+        cfg, sim, backend = self.cfg, self.sim, self.backend
+        return jax.jit(
+            lambda params, x, rng: fwd(params, x, cfg, sim, rng, backend=backend)
+        )
+
+    # -- task helpers --------------------------------------------------
+
+    def classify(self, images: Array, rng: Array, params: Any = None) -> Array:
+        """[B,H,W,C] images -> [B] predicted class labels."""
+        assert self.task == "vit", "classify() is the ViT task"
+        return jnp.argmax(self.forward(images, rng, params), axis=-1)
+
+    def detect_symbols(self, feats: Array, rng: Array, params: Any = None) -> Array:
+        """[B,L,feat] received-signal features -> [B,L] detected symbols."""
+        assert self.task == "gpt", "detect_symbols() is the GPT/ICL task"
+        return jnp.argmax(self.forward(feats, rng, params), axis=-1)

@@ -33,7 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 Array = jax.Array
 
 
-def _kernel(s_ref, w_ref, scale_ref, out_ref, acc_ref, *, t_steps: int,
+def _kernel(s_ref, w_ref, scale_ref, bias_ref, out_ref, acc_ref, *, t_steps: int,
             n_in_blocks: int, beta: float, v_thresh: float):
     ib = pl.program_id(2)
 
@@ -49,9 +49,11 @@ def _kernel(s_ref, w_ref, scale_ref, out_ref, acc_ref, *, t_steps: int,
     @pl.when(ib == n_in_blocks - 1)
     def _fire():
         scale = scale_ref[...].astype(jnp.float32)  # [bout]
+        bias = bias_ref[...].astype(jnp.float32)  # [bout], digital per-column
         v = jnp.zeros(acc_ref.shape[1:], jnp.float32)
         for t in range(t_steps):
-            v = beta * v + acc_ref[t] * scale[None, :]
+            # parenthesised to match the ref oracle's summation order exactly
+            v = beta * v + (acc_ref[t] * scale[None, :] + bias[None, :])
             spike = (v >= v_thresh).astype(jnp.float32)
             v = v * (1.0 - spike)
             out_ref[t] = spike.astype(out_ref.dtype)
@@ -61,6 +63,7 @@ def aimc_spiking_linear_kernel(
     spikes: Array,  # [T, B, d_in] binary (any float/int dtype)
     w_levels: Array,  # [d_in, d_out] int8 (5-bit conductance-pair levels)
     scale: Array,  # [d_out] f32 per-column scale
+    bias: Array,  # [d_out] f32 digital bias added to each timestep's current
     *,
     beta: float = 0.5,
     v_thresh: float = 1.0,
@@ -86,6 +89,7 @@ def aimc_spiking_linear_kernel(
             pl.BlockSpec((t, block_b, block_in), lambda ib, io, ii: (0, ib, ii)),
             pl.BlockSpec((block_in, block_out), lambda ib, io, ii: (ii, io)),
             pl.BlockSpec((block_out,), lambda ib, io, ii: (io,)),
+            pl.BlockSpec((block_out,), lambda ib, io, ii: (io,)),
         ],
         out_specs=pl.BlockSpec((t, block_b, block_out), lambda ib, io, ii: (0, ib, io)),
         out_shape=jax.ShapeDtypeStruct((t, b, d_out), jnp.uint8),
@@ -93,4 +97,4 @@ def aimc_spiking_linear_kernel(
         # sequential d_in grid axis — never written to HBM
         scratch_shapes=[pltpu.VMEM((t, block_b, block_out), jnp.float32)],
         interpret=interpret,
-    )(spikes, w_levels, scale)
+    )(spikes, w_levels, scale, bias)

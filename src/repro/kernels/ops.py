@@ -66,22 +66,37 @@ def ssa_attention_packed(
 ) -> Array:
     """Bit-packed SSA attention; returns uint8 spikes [T,B,H,N,D].
 
-    Requires D % 32 == 0 and N % 32 == 0 (the tile packs the d_k axis for
-    stage 1 and the n' axis for stage 2)."""
+    N and D may be arbitrary: the wrapper zero-pads both pack axes up to
+    multiples of 32 and slices the result back.  The comparator PRNs are
+    drawn at the *logical* (unpadded) shapes with the *logical* ranges
+    (r_s ~ U{0..d-1}, r_a ~ U{0..n-1}) so the output is bit-identical to
+    the unpadded integer oracle given the same key — padded q/k rows and
+    v columns are all-zero, so their AND-counts are 0 and can never beat
+    a non-negative comparator draw."""
     t, b, h, n, d = q.shape
-    assert d % 32 == 0 and n % 32 == 0, "pack axes must be multiples of 32"
     g = t * b * h
+    # comparator integers at logical shapes/ranges (bit-exactness contract)
+    rs, ra = draw_comparator_prns(key, (g, n, n), (g, n, d), d, n)
+    n_pad = (-n) % 32
+    d_pad = (-d) % 32
+    np_, dp_ = n + n_pad, d + d_pad
     qf = q.reshape(g, n, d).astype(jnp.uint8)
     kf = k.reshape(g, n, d).astype(jnp.uint8)
     vf = v.reshape(g, n, d).astype(jnp.uint8)
+    if n_pad or d_pad:
+        pad = ((0, 0), (0, n_pad), (0, d_pad))
+        qf = jnp.pad(qf, pad)
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+        rs = jnp.pad(rs, ((0, 0), (0, n_pad), (0, n_pad)))
+        ra = jnp.pad(ra, ((0, 0), (0, n_pad), (0, d_pad)))
     qp = pack_bits(qf, axis=-1)  # [G, N, D/32]
     kp = pack_bits(kf, axis=-1)
     vp = pack_bits(vf, axis=-2)  # pack over n': [G, N/32, D]
-    rs, ra = draw_comparator_prns(key, (g, n, n), (g, n, d), d, n)
     out = ssa_attention_kernel(
-        qp, kp, vp, rs, ra, n=n, d=d, causal=causal, interpret=interpret
+        qp, kp, vp, rs, ra, n=np_, d=dp_, causal=causal, interpret=interpret
     )
-    return out.reshape(t, b, h, n, d)
+    return out[:, :n, :d].reshape(t, b, h, n, d)
 
 
 @partial(jax.jit, static_argnames=("beta", "v_thresh", "interpret"))
@@ -107,6 +122,7 @@ def aimc_spiking_linear(
     spikes: Array,  # [T, B, d_in]
     w_levels: Array,  # [d_in, d_out] int8
     scale: Array,  # [d_out]
+    bias: Optional[Array] = None,  # [d_out] digital per-column bias
     *,
     beta: float = 0.5,
     v_thresh: float = 1.0,
@@ -124,8 +140,12 @@ def aimc_spiking_linear(
     sp = jnp.pad(spikes, ((0, 0), (0, bb - b), (0, di - d_in)))
     wp = jnp.pad(w_levels, ((0, di - d_in), (0, do - d_out)))
     sc = jnp.pad(scale, (0, do - d_out))
+    if bias is None:
+        bi = jnp.zeros((do,), jnp.float32)
+    else:
+        bi = jnp.pad(bias.astype(jnp.float32), (0, do - d_out))
     out = aimc_spiking_linear_kernel(
-        sp, wp, sc, beta=beta, v_thresh=v_thresh,
+        sp, wp, sc, bi, beta=beta, v_thresh=v_thresh,
         block_b=min(bb, 128), block_in=128, block_out=128, interpret=interpret,
     )
     return out[:, :b, :d_out]

@@ -52,6 +52,7 @@ def aimc_spiking_linear_ref(
     spikes: Array,  # [T, B, d_in] binary
     w_levels: Array,  # [d_in, d_out] int8
     scale: Array,  # [d_out] f32
+    bias: Array = None,  # [d_out] f32 digital per-column bias
     *,
     beta: float = 0.5,
     v_thresh: float = 1.0,
@@ -60,6 +61,8 @@ def aimc_spiking_linear_ref(
     pre = jnp.einsum(
         "tbi,io->tbo", spikes.astype(jnp.float32), w_levels.astype(jnp.float32)
     ) * scale[None, None, :]
+    if bias is not None:
+        pre = pre + bias.astype(jnp.float32)[None, None, :]
 
     def step(v, i_t):
         v = beta * v + i_t

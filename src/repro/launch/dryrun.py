@@ -116,7 +116,10 @@ def count_active_params(cfg, abstract_params) -> int:
     import jax
 
     total = 0
-    flat = jax.tree.flatten_with_path(abstract_params)[0]
+    # jax.tree.flatten_with_path is jax >= 0.5; fall back to tree_util
+    flatten_with_path = getattr(jax.tree, "flatten_with_path",
+                                jax.tree_util.tree_flatten_with_path)
+    flat = flatten_with_path(abstract_params)[0]
     for path, leaf in flat:
         keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
         frac = 1.0
@@ -176,8 +179,12 @@ def _lower_cell(cfg, shape, mesh, parallel, *, opt_dtype: str):
         abatch = abstract_inputs(shape.global_batch, shape.seq_len, frontend_dim=fd)
 
         def prefill_fn(params, batch):
+            # spiking archs need an rng for Bernoulli coding; a constant key
+            # is fine for lowering/measurement (it constant-folds)
+            rng = jax.random.PRNGKey(0) if cfg.spiking else None
             logits, _ = T.forward(params, batch, cfg, pctx,
-                                  moe_impl=parallel.moe_impl, remat="none")
+                                  moe_impl=parallel.moe_impl, remat="none",
+                                  rng=rng)
             return logits
 
         jf = jax.jit(prefill_fn, in_shardings=(pshard, batch_shardings(abatch)))

@@ -39,15 +39,18 @@ def serve(
     cfg = reduced_config(arch) if smoke else get_config(arch)
     if cfg.frontend != "none":
         print(f"[serve] {arch} is a {cfg.family} backbone; serving over stub embeddings")
+    if cfg.spiking:
+        print(f"[serve] {arch} is a spiking arch; decode serves its rate "
+              "(ANN-equivalent) network — spike-train decode has no KV-cache path")
     mesh = make_test_mesh((1, 1))
     parallel = ParallelConfig(moe_impl="ep_a2a" if cfg.is_moe else "dense")
     pctx = SH.make_pctx(mesh, parallel)
     key = jax.random.PRNGKey(seed)
     params = T.init_params(key, cfg)
 
-    decode = jax.jit(
-        lambda p, c, t: T.decode_step(p, c, t, cfg, pctx, moe_impl=parallel.moe_impl)
-    )
+    step = lambda p, c, t: T.decode_step(p, c, t, cfg, pctx, moe_impl=parallel.moe_impl)
+    decode = jax.jit(step)  # batched over all slots
+    decode1 = jax.jit(step)  # batch-1 prefill trace (separate shape cache)
 
     # request queue: random prompts of varying length
     rng = jax.random.PRNGKey(seed + 1)
@@ -65,13 +68,34 @@ def serve(
     t0 = time.time()
     decoded_tokens = 0
 
+    def assign_slot(full, one, slot):
+        """Write a batch-1 cache into slot ``slot`` of the batched cache.
+
+        Period-stacked leaves are [n_periods, batch, ...]; remainder leaves
+        are [batch, ...].  Per-slot ``pos`` counters make this sound: the
+        new request resumes from its own prefill position while the other
+        slots keep decoding at theirs."""
+        out = {}
+        if "periods" in full:
+            out["periods"] = jax.tree.map(
+                lambda f, o: f.at[:, slot].set(o[:, 0]), full["periods"], one["periods"]
+            )
+        if "remainder" in full:
+            out["remainder"] = jax.tree.map(
+                lambda f, o: f.at[slot].set(o[0]), full["remainder"], one["remainder"]
+            )
+        return out
+
     def feed(slot):
-        nonlocal tokens
+        nonlocal tokens, cache
         prompt = queue.pop(0)
-        # prefill by stepping the prompt through decode (per-slot cache slice
-        # keeps this simple; a production server lowers a batched prefill)
+        # prefill: step the whole prompt context through a batch-1 cache,
+        # then splice it into this slot (a production server would lower a
+        # batched prefill kernel; the cache/positions logic is identical)
+        c1 = T.init_cache(cfg, 1, cache_len)
         for tok in prompt[:-1]:
-            pass  # prompt context beyond the last token is dropped in smoke mode
+            _, c1 = decode1(params, c1, jnp.full((1, 1), int(tok), jnp.int32))
+        cache = assign_slot(cache, c1, slot)
         tokens = tokens.at[slot, 0].set(int(prompt[-1]))
         return int(len(prompt))
 

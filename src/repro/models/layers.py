@@ -312,13 +312,15 @@ def attention_decode(
 ) -> Tuple[Array, Dict[str, Array]]:
     """Single-token decode with a KV cache.
 
-    cache: {"k": [B,L,K,D], "v": [B,L,K,D], "pos": [] int32} — ``pos`` is the
-    number of valid tokens.  For windowed layers the cache is a ring buffer
-    of length ``window``.
+    cache: {"k": [B,L,K,D], "v": [B,L,K,D], "pos": [B] int32} — ``pos`` is
+    the per-slot number of valid tokens, so batched decode can serve
+    requests at *different* sequence positions (continuous batching: each
+    slot prefills independently and advances in lockstep afterwards).  For
+    windowed layers the cache is a ring buffer of length ``window``.
     """
     b, s, _ = x.shape
     assert s == 1
-    pos = cache["pos"]
+    pos = jnp.broadcast_to(cache["pos"], (b,))  # [B] per-slot positions
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
@@ -326,19 +328,21 @@ def attention_decode(
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
         v = v + params["bv"].astype(x.dtype)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = pos[:, None]
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     L = cache["k"].shape[1]
     slot = (pos % jnp.int32(window)) if window else pos
-    ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    barange = jnp.arange(b)
+    ck = cache["k"].at[barange, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[barange, slot].set(v[:, 0].astype(cache["v"].dtype))
     idx = jnp.arange(L)
     if window:
-        valid = (idx < jnp.minimum(pos + 1, L))[None, :]
+        valid = idx[None, :] < jnp.minimum(pos + 1, L)[:, None]
     else:
-        valid = (idx <= pos)[None, :]
-    out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), valid[None, None, :, :], cfg.attn_softcap)
+        valid = idx[None, :] <= pos[:, None]
+    out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                valid[:, None, None, None, :], cfg.attn_softcap)
     y = jnp.einsum("bshd,hdk->bsk", out, params["wo"].astype(x.dtype))
     return y, {"k": ck, "v": cv, "pos": pos + 1}
 
@@ -350,7 +354,7 @@ def attention_cache_schema(cfg, batch: int, seq_len: int, *, window: int = 0):
     return {
         "k": jax.ShapeDtypeStruct((batch, L, kv, hd), dt),
         "v": jax.ShapeDtypeStruct((batch, L, kv, hd), dt),
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 
 

@@ -47,6 +47,16 @@ from repro.models.layers import ParamDef, _act
 
 Array = jax.Array
 
+# jax.shard_map landed in jax 0.6; on the pinned 0.4.x it lives under
+# jax.experimental (with replication checking named check_rep, off by
+# default behaviourally equivalent to check_vma=False here).
+if hasattr(jax, "shard_map"):
+    _shard_map = partial(jax.shard_map, check_vma=False)
+else:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _eshard_map
+
+    _shard_map = partial(_eshard_map, check_rep=False)
+
 
 # ---------------------------------------------------------------------------
 # Parallel context — how the surrounding program is laid out on the mesh
@@ -309,12 +319,11 @@ def moe_ep(params, x: Array, cfg, pctx: ParallelCtx, *, seq_sharded: bool) -> Tu
     wspec_in = P(pctx.tp_axis, None, pctx.fsdp_axis)  # wi/wg [E, d, f_l]
     wspec_out = P(pctx.tp_axis, pctx.fsdp_axis, None)  # wo [E, f_l, d]
     in_specs = (xs, xs, xs, wspec_in, wspec_out) + ((wspec_in,) if gated else ())
-    y = jax.shard_map(
+    y = _shard_map(
         mapped,
         mesh=pctx.mesh,
         in_specs=in_specs,
         out_specs=xs,
-        check_vma=False,
     )(x, weights, idx, params["wi"], params["wo"], *extra)
     return y, aux
 

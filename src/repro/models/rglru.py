@@ -109,7 +109,7 @@ def rglru_mixer(params, x: Array, cfg, *, return_state: bool = False, pctx=None)
         return y, {
             "h": h[:, -1, :],
             "conv": conv_tail,
-            "pos": jnp.int32(L),
+            "pos": jnp.full((b,), L, jnp.int32),
         }
     return y
 
@@ -121,7 +121,7 @@ def rglru_cache_schema(cfg, batch: int):
     return {
         "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
         "conv": jax.ShapeDtypeStruct((batch, k - 1, w), dt),
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 
 
@@ -141,5 +141,5 @@ def rglru_decode(params, x: Array, cache, cfg):
     return y, {
         "h": h,
         "conv": hist[:, 1:, :].astype(cache["conv"].dtype),
-        "pos": cache["pos"] + 1,
+        "pos": jnp.broadcast_to(cache["pos"], (b,)) + 1,
     }

@@ -196,7 +196,7 @@ def ssd_mixer(params, x: Array, cfg, *, return_state: bool = False, pctx=None):
             "ssd": state,
             "conv_x": cx,
             "conv_bc": cbc,
-            "pos": jnp.int32(L),
+            "pos": jnp.full((b,), L, jnp.int32),
         }
     return out
 
@@ -210,7 +210,7 @@ def ssd_cache_schema(cfg, batch: int):
         "ssd": jax.ShapeDtypeStruct((batch, h, s, p), dt),
         "conv_x": jax.ShapeDtypeStruct((batch, k - 1, d_in), dt),
         "conv_bc": jax.ShapeDtypeStruct((batch, k - 1, 2 * g * s), dt),
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
     }
 
 
@@ -254,6 +254,6 @@ def ssd_decode(params, x: Array, cache: Dict[str, Array], cfg):
         "ssd": st.astype(cache["ssd"].dtype),
         "conv_x": hist_x[:, 1:, :].astype(cache["conv_x"].dtype),
         "conv_bc": hist_bc[:, 1:, :].astype(cache["conv_bc"].dtype),
-        "pos": cache["pos"] + 1,
+        "pos": jnp.broadcast_to(cache["pos"], (b,)) + 1,
     }
     return out, new_cache

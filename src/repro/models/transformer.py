@@ -35,6 +35,7 @@ from repro.models.layers import ParamDef
 from repro.models.moe import ParallelCtx
 from repro.core import spikes as SP
 from repro.core import ssa as SSA
+from repro.core.spiking_transformer import _default_backend
 
 Array = jax.Array
 
@@ -193,19 +194,25 @@ def _apply_block_decode(
 # ---------------------------------------------------------------------------
 
 
-def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array) -> Array:
-    """SSA attention over spike trains s [T,B,S,d] (paper Eq. 6)."""
+def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array, backend) -> Array:
+    """SSA attention over spike trains s [T,B,S,d] (paper Eq. 6).
+
+    All spiking primitives (Q/K/V/O spiking linears and the SSA core) come
+    from ``backend`` — the same dispatch as the paper models in
+    ``core/spiking_transformer.py``, so the generic LM stack runs on any
+    substrate (reference / integer / pallas)."""
     T, b, n, d = s.shape
     h, hd = cfg.num_heads, cfg.resolved_head_dim
     kv = cfg.num_kv_heads
+    ks = jax.random.split(key, 5)
 
-    def proj(w):  # LIF(W s^t): spiking Q/K/V generation (Table I)
-        pre = jnp.einsum("tbnd,dhk->tbnhk", s, w.astype(s.dtype))
-        return SP.lif(pre.reshape(T, b, n, -1)).reshape(T, b, n, *pre.shape[3:])
+    def proj(w, kk):  # LIF(W s^t): spiking Q/K/V generation (Table I)
+        out = backend.spiking_linear(kk, w.astype(s.dtype).reshape(d, -1), s)
+        return out.reshape(T, b, n, -1, hd)
 
-    q = proj(params["wq"])  # [T,B,S,H,hd]
-    k = proj(params["wk"])
-    v = proj(params["wv"])
+    q = proj(params["wq"], ks[0])  # [T,B,S,H,hd]
+    k = proj(params["wk"], ks[1])
+    v = proj(params["wv"], ks[2])
     if kv != h:  # GQA: repeat kv spike heads across the group
         rep = h // kv
         k = jnp.repeat(k, rep, axis=3)
@@ -214,23 +221,26 @@ def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array) -> Array:
     kh = jnp.moveaxis(k, 3, 2).reshape(T, b, h, n, hd)
     vh = jnp.moveaxis(v, 3, 2).reshape(T, b, h, n, hd)
     if cfg.attention_kind == "lif":
-        a = SSA.lif_spiking_attention(qh, kh, vh, causal=True)
+        a = SSA.lif_spiking_attention(
+            qh.astype(s.dtype), kh.astype(s.dtype), vh.astype(s.dtype), causal=True
+        )
     else:
-        a = SSA.ssa_attention(key, qh, kh, vh, causal=True)
+        a = backend.ssa_attention(ks[3], qh, kh, vh, causal=True)
     a = jnp.moveaxis(a.reshape(T, b, h, n, hd), 2, 3).reshape(T, b, n, h * hd)
-    out = a @ params["wo"].astype(s.dtype).reshape(h * hd, -1)
     # LIF on the output projection (spiking neuron tile semantics)
-    return SP.lif(out)
+    return backend.spiking_linear(ks[4], params["wo"].astype(s.dtype).reshape(h * hd, -1), a)
 
 
-def _spiking_mlp(params, s: Array, cfg: ModelConfig) -> Array:
+def _spiking_mlp(params, s: Array, cfg: ModelConfig, key: Array, backend) -> Array:
     """LIF(W2 LIF(W1 s^t)) — Table I feed-forward row."""
-    h = SP.spiking_linear(s, params["wi"], None)
-    return SP.spiking_linear(h, params["wo"], None)
+    k1, k2 = jax.random.split(key)
+    h = backend.spiking_linear(k1, params["wi"].astype(s.dtype), s)
+    return backend.spiking_linear(k2, params["wo"].astype(s.dtype), h)
 
 
 def _apply_block_spiking(
     params, s: Array, cfg: ModelConfig, pctx: ParallelCtx, mixer: str, key: Array,
+    backend=None,
 ) -> Tuple[Array, Array]:
     """Spiking residual block over spike trains s [T,B,N,d].
 
@@ -239,10 +249,11 @@ def _apply_block_spiking(
     Attention-free mixers (ssd/rglru) run on the *rate* interface — the
     paper's technique does not apply to them (DESIGN.md §Arch-applicability).
     """
+    backend = backend or _default_backend()
     aux = jnp.zeros((), jnp.float32)
     k1, k2 = jax.random.split(key)
     if mixer in ("attn", "local"):
-        h = _spiking_attention(params["mixer"], s, cfg, k1)
+        h = _spiking_attention(params["mixer"], s, cfg, k1, backend)
     else:
         rate = SP.rate_decode(s)  # [B,N,d]
         if mixer == "ssd":
@@ -257,7 +268,7 @@ def _apply_block_spiking(
             ym, aux = M.moe_apply(params["moe"], rate, cfg, pctx, impl="dense")
             y = SP.rate_encode(k2, jax.nn.sigmoid(ym), s.shape[0])
         else:
-            y = _spiking_mlp(params["mlp"], s, cfg)
+            y = _spiking_mlp(params["mlp"], s, cfg, k2, backend)
         s = s + y
     return s, aux
 
@@ -301,10 +312,11 @@ def forward(
     moe_impl: str = "ep_a2a",
     remat: str = "block",
     rng: Optional[Array] = None,
+    backend=None,
 ) -> Tuple[Array, Array]:
     """Train/prefill forward -> (logits [B,S,V], moe aux loss)."""
     if cfg.spiking:
-        return _forward_spiking(params, batch, cfg, pctx, rng=rng)
+        return _forward_spiking(params, batch, cfg, pctx, rng=rng, backend=backend)
     x = _embed_inputs(params, batch, cfg)
     b, sl, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32), (b, sl))
@@ -342,9 +354,11 @@ def forward(
     return logits, aux
 
 
-def _forward_spiking(params, batch, cfg: ModelConfig, pctx: ParallelCtx, *, rng):
+def _forward_spiking(params, batch, cfg: ModelConfig, pctx: ParallelCtx, *, rng,
+                     backend=None):
     """Spiking forward: rate-encode, spiking blocks over T, rate-decode logits."""
     assert rng is not None, "spiking forward needs an rng for Bernoulli coding"
+    backend = backend or _default_backend()
     x = _embed_inputs(params, batch, cfg)
     k_enc, k_blocks = jax.random.split(rng)
     s = SP.rate_encode(k_enc, jax.nn.sigmoid(x), cfg.spike_T)  # [T,B,S,d]
@@ -358,7 +372,9 @@ def _forward_spiking(params, batch, cfg: ModelConfig, pctx: ParallelCtx, *, rng)
         period_params, key = xs
         kk = jax.random.split(key, cfg.period)
         for i, mixer in enumerate(cfg.block_pattern):
-            s, a = _apply_block_spiking(period_params[f"blk{i}"], s, cfg, pctx, mixer, kk[i])
+            s, a = _apply_block_spiking(
+                period_params[f"blk{i}"], s, cfg, pctx, mixer, kk[i], backend
+            )
             aux = aux + a
         return (s, aux), None
 
@@ -368,11 +384,12 @@ def _forward_spiking(params, batch, cfg: ModelConfig, pctx: ParallelCtx, *, rng)
         kk = jax.random.split(keys[-1], cfg.remainder_layers)
         for i in range(cfg.remainder_layers):
             s, a = _apply_block_spiking(
-                params["remainder"][f"blk{i}"], s, cfg, pctx, cfg.block_pattern[i], kk[i]
+                params["remainder"][f"blk{i}"], s, cfg, pctx, cfg.block_pattern[i],
+                kk[i], backend,
             )
             aux = aux + a
     # rate-decode the stream, then unembed (paper: loss on time-averaged output)
-    x = SP.rate_decode(s)
+    x = SP.rate_decode(s.astype(jnp.float32)).astype(model_dtype(cfg))
     logits = _unembed(params, x, cfg)
     return logits, aux
 
@@ -395,7 +412,7 @@ def softmax_xent(logits: Array, targets: Array, mask: Optional[Array] = None) ->
 def loss_fn(
     params, batch, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
     *, moe_impl: str = "ep_a2a", remat: str = "block", rng: Optional[Array] = None,
-    aux_weight: float = 0.01,
+    aux_weight: float = 0.01, backend=None,
 ) -> Tuple[Array, Dict[str, Array]]:
     if cfg.frontend != "none":
         inputs = {"embeddings": batch["embeddings"]}
@@ -405,7 +422,8 @@ def loss_fn(
         inputs = {"tokens": batch["tokens"][:, :-1]}
         targets = batch["tokens"][:, 1:]
         mask = batch.get("mask")
-    logits, aux = forward(params, inputs, cfg, pctx, moe_impl=moe_impl, remat=remat, rng=rng)
+    logits, aux = forward(params, inputs, cfg, pctx, moe_impl=moe_impl, remat=remat,
+                          rng=rng, backend=backend)
     xent = softmax_xent(logits, targets, mask)
     loss = xent + aux_weight * aux
     return loss, {"xent": xent, "moe_aux": aux}
@@ -455,8 +473,8 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, filled: int = 0):
     """Materialise a zero cache; ``filled`` marks tokens as already present."""
 
     def zero(s):
-        if s.shape == () and s.dtype == jnp.int32:
-            return jnp.int32(filled)
+        if s.dtype == jnp.int32:  # per-slot "pos" counters
+            return jnp.full(s.shape, filled, jnp.int32)
         return jnp.zeros(s.shape, s.dtype)
 
     return jax.tree.map(zero, cache_schema(cfg, batch, seq_len))
