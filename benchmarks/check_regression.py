@@ -1,0 +1,79 @@
+"""Benchmark regression gate for CI.
+
+    python benchmarks/check_regression.py current.json \
+        --baseline benchmarks/baseline.json --tolerance 0.30
+
+Compares a fresh ``serving_throughput.py --json`` run against the
+checked-in baseline and exits non-zero if any gated metric regressed by
+more than ``--tolerance`` (default 30%).
+
+Gated by default: the ``ratios`` block only — batched-vs-sequential
+speedup and backend-vs-reference relative throughput.  Ratios are
+machine-robust (both numerator and denominator ran on the same runner in
+the same process), while absolute tokens/sec swings with CI hardware;
+pass ``--absolute`` to gate raw tok/s too (useful on pinned hardware).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, tolerance: float, absolute: bool):
+    failures = []
+    report = []
+    base_ratios = baseline.get("ratios", {})
+    cur_ratios = current.get("ratios", {})
+    for k, base in sorted(base_ratios.items()):
+        cur = cur_ratios.get(k)
+        if cur is None:
+            failures.append(f"ratio {k}: missing from current run")
+            continue
+        floor = base * (1.0 - tolerance)
+        status = "OK" if cur >= floor else "REGRESSED"
+        report.append(f"ratio {k}: {cur:.2f}x vs baseline {base:.2f}x "
+                      f"(floor {floor:.2f}x) {status}")
+        if cur < floor:
+            failures.append(report[-1])
+    if absolute:
+        base_by = {r["name"]: r for r in baseline.get("results", [])}
+        for r in current.get("results", []):
+            b = base_by.get(r["name"])
+            if b is None:
+                continue
+            floor = b["tokens_per_sec"] * (1.0 - tolerance)
+            status = "OK" if r["tokens_per_sec"] >= floor else "REGRESSED"
+            report.append(
+                f"abs {r['name']}: {r['tokens_per_sec']:.1f} tok/s vs baseline "
+                f"{b['tokens_per_sec']:.1f} (floor {floor:.1f}) {status}")
+            if r["tokens_per_sec"] < floor:
+                failures.append(report[-1])
+    return failures, report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh serving_throughput --json output")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate absolute tok/s (pinned hardware only)")
+    a = ap.parse_args(argv)
+    with open(a.current) as f:
+        current = json.load(f)
+    with open(a.baseline) as f:
+        baseline = json.load(f)
+    failures, report = check(current, baseline, a.tolerance, a.absolute)
+    for line in report:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s) beyond "
+              f"{a.tolerance:.0%} tolerance", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benchmark gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Serving throughput: tokens/sec vs batch size vs backend.
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py --smoke
+    PYTHONPATH=src python benchmarks/serving_throughput.py --smoke --json out.json
+
+Drives the continuous-batching ``BatchScheduler`` (one jitted batched
+``decode_step``) end to end and measures decoded tokens per wall-second:
+
+* **batch sweep** — the same request load served with 1 vs N slots; the
+  slots=1 run is the old sequential serve loop (one request at a time), so
+  ``speedup@N`` is exactly what continuous batching buys.
+* **backend sweep** — spiking SSA archs decode through every engine
+  backend (reference / integer / pallas-interpret on CPU).
+
+JSON output carries both absolute tok/s and machine-robust *ratios*
+(batched-vs-sequential speedup, backend-vs-reference relative throughput);
+CI gates regressions on the ratios (see ``benchmarks/check_regression.py``)
+because absolute CPU throughput varies across runners.
+
+``run(fast)`` rows integrate with ``benchmarks/run.py`` CSV output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs.registry import get_config, reduced_config
+from repro.engine import get_backend
+from repro.models import transformer as T
+from repro.serving import BatchScheduler
+
+SPIKING_ARCH = "xpikeformer-gpt-4-256"
+ANN_ARCH = "yi-9b"
+
+
+def _serve_once(sch, cfg, *, n_requests, max_new, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    for i in range(n_requests):
+        p = jax.random.randint(jax.random.fold_in(rng, i), (4 + (i % 3),), 0,
+                               cfg.vocab_size, jax.numpy.int32)
+        sch.submit(p, max_new, seed=seed + i)
+    sch.run()
+    return sch.stats
+
+
+def _measure(params, cfg, backend, *, slots, cache_len, **kw):
+    sch = BatchScheduler(params, cfg, backend, slots=slots, cache_len=cache_len)
+    _serve_once(sch, cfg, **kw)  # warmup: compiles prefill + decode
+    sch.reset()
+    return _serve_once(sch, cfg, **kw)
+
+
+def bench(smoke: bool = True, *, batch: int = 8, max_new: int = 8,
+          backends=("reference", "integer", "pallas")):
+    """Returns the result dict written to --json."""
+    results = []
+    ratios = {}
+
+    def load(arch):
+        cfg = reduced_config(arch) if smoke else get_config(arch)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        return cfg, params
+
+    def row(name, arch, bk, slots, st):
+        return {
+            "name": name, "arch": arch, "backend": bk, "slots": slots,
+            "tokens_per_sec": st.tokens_per_sec,
+            "decode_tokens_per_sec": st.decode_tokens_per_sec,
+        }
+
+    # -- ANN arch: batched vs sequential ------------------------------
+    cfg, params = load(ANN_ARCH)
+    kw = dict(n_requests=batch, max_new=max_new, cache_len=64)
+    seq = _measure(params, cfg, None, slots=1, **kw)
+    bat = _measure(params, cfg, None, slots=batch, **kw)
+    results += [
+        row(f"serve/{ANN_ARCH}[seq]", ANN_ARCH, "float", 1, seq),
+        row(f"serve/{ANN_ARCH}[batch{batch}]", ANN_ARCH, "float", batch, bat),
+    ]
+    # speedup is gated on decode-phase throughput: prefill is the same
+    # batch-1 scan in both configurations, the batched decode_step is the win
+    ratios[f"speedup_batch{batch}_{ANN_ARCH}"] = (
+        bat.decode_tokens_per_sec / max(seq.decode_tokens_per_sec, 1e-9))
+
+    # -- spiking arch: backend sweep + batched vs sequential ----------
+    cfg, params = load(SPIKING_ARCH)
+    ref_bat = None
+    for bk in backends:
+        be = get_backend(bk)
+        bat = _measure(params, cfg, be, slots=batch, **kw)
+        results.append(
+            row(f"serve/{SPIKING_ARCH}[{bk},batch{batch}]", SPIKING_ARCH, bk,
+                batch, bat))
+        if bk == "reference":
+            ref_bat = bat
+            seq = _measure(params, cfg, be, slots=1, **kw)
+            results.append(
+                row(f"serve/{SPIKING_ARCH}[{bk},seq]", SPIKING_ARCH, bk, 1, seq))
+            ratios[f"speedup_batch{batch}_{SPIKING_ARCH}"] = (
+                bat.decode_tokens_per_sec / max(seq.decode_tokens_per_sec, 1e-9))
+        elif ref_bat is not None:
+            ratios[f"rel_{bk}_vs_reference_{SPIKING_ARCH}"] = (
+                bat.decode_tokens_per_sec / max(ref_bat.decode_tokens_per_sec, 1e-9))
+
+    return {
+        "meta": {"smoke": smoke, "batch": batch, "max_new": max_new,
+                 "device": jax.devices()[0].platform},
+        "results": results,
+        "ratios": ratios,
+    }
+
+
+def run(fast: bool = True):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows.
+
+    us_per_call is us per decoded token (1e6 / tok/s) so lower is better,
+    like every other row in the suite."""
+    out = bench(smoke=fast)
+    rows = []
+    for r in out["results"]:
+        rows.append((r["name"], 1e6 / max(r["tokens_per_sec"], 1e-9),
+                     f"{r['tokens_per_sec']:.1f} tok/s slots={r['slots']}"))
+    for k, v in out["ratios"].items():
+        rows.append((f"serve/ratio/{k}", 0.0, f"{v:.2f}x"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=False,
+                    help="reduced configs (CPU CI)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    a = ap.parse_args(argv)
+    out = bench(smoke=a.smoke, batch=a.batch, max_new=a.max_new)
+    for r in out["results"]:
+        print(f"{r['name']:48s} {r['tokens_per_sec']:10.1f} tok/s e2e  "
+              f"{r['decode_tokens_per_sec']:10.1f} tok/s decode  slots={r['slots']}")
+    for k, v in out["ratios"].items():
+        print(f"{'ratio/' + k:48s} {v:10.2f} x")
+    if a.json:
+        with open(a.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[serving_throughput] wrote {a.json}")
+
+
+if __name__ == "__main__":
+    main()

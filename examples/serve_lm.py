@@ -1,11 +1,24 @@
 """Batched serving example: continuous-batching decode over any --arch.
 
     PYTHONPATH=src python examples/serve_lm.py --arch gemma3-27b --requests 6
+    PYTHONPATH=src python examples/serve_lm.py --arch xpikeformer-gpt-4-256 \
+        --backend pallas
+
+Spiking SSA archs (xpikeformer-gpt-*) decode through the engine backend
+over spike-train KV caches; pick --backend reference|integer|pallas.  Also
+demonstrates the engine-level batch API::
+
+    eng = XpikeformerEngine.from_config(arch, task="lm", backend=backend)
+    eng.init(key)
+    outs = eng.generate(prompts, max_new=8)
 """
 
 import argparse
 
+import jax
+
 from repro.configs.registry import list_archs
+from repro.engine import XpikeformerEngine
 from repro.launch.serve import serve
 
 
@@ -15,9 +28,18 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "integer", "pallas"])
     args = ap.parse_args()
     serve(args.arch, n_requests=args.requests, slots=args.slots,
-          max_new=args.max_new)
+          max_new=args.max_new, backend=args.backend)
+
+    # the same serving system through the engine facade (batch generate)
+    eng = XpikeformerEngine.from_config(args.arch, task="lm",
+                                        backend=args.backend, reduced=True)
+    eng.init(jax.random.PRNGKey(0))
+    outs = eng.generate([[5, 7, 9], [11, 13]], max_new=4, slots=2)
+    print(f"[generate] {outs}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,14 @@ Quick start::
     eng = XpikeformerEngine.from_config("xpikeformer-vit-smoke", backend="pallas")
     params = eng.init(jax.random.PRNGKey(0))
     logits = eng.forward(images, jax.random.PRNGKey(1))
+
+Serving (generic LM-stack archs, ``task="lm"``)::
+
+    eng = XpikeformerEngine.from_config("xpikeformer-gpt-4-256", task="lm",
+                                        backend="pallas")
+    eng.init(jax.random.PRNGKey(0))
+    outs = eng.generate([[5, 7, 9], [3, 1]], max_new=16)       # batch API
+    outs, stats = eng.serve(prompts, max_new=16, slots=8)      # continuous batching
 """
 
 from __future__ import annotations
@@ -75,6 +83,20 @@ class Backend(Protocol):
     def ssa_attention(self, key: Array, q: Array, k: Array, v: Array, *,
                       causal: bool = False) -> Array:
         """Stochastic spiking attention over ``[T,B,H,N,d]`` spike trains."""
+        ...
+
+    def ssa_attention_decode(self, slot_keys: Array, q: Array, k: Array,
+                             v: Array, *, i_max: int) -> Array:
+        """One-query SSA decode against cached KV spike trains (serving).
+
+        ``q [T,B,H,1,d]`` is the token being decoded; ``k``/``v``
+        ``[T,B,H,L,d]`` are the slot's cached spike trains, zero beyond the
+        slot's position (zero spikes never beat a comparator draw, so
+        validity masking is implicit).  ``slot_keys [B,2]`` are per-slot
+        uint32 PRNG keys: every slot draws its own comparator integers so
+        continuous-batching admission cannot perturb running slots.
+        ``i_max`` is the output comparator range — the cache capacity (the
+        hardware tile dimension), fixed regardless of fill level."""
         ...
 
     def lif(self, currents: Array, *, beta: float = 0.5,
@@ -145,6 +167,23 @@ class ReferenceBackend:
     def ssa_attention(self, key, q, k, v, *, causal=False):
         return SSA.ssa_attention(key, q, k, v, causal=causal)
 
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+        d = q.shape[-1]
+
+        def per_slot(key, qb, kb, vb):  # [T,H,1,d] x [T,H,L,d]
+            k1, k2 = jax.random.split(key)
+            qf, kf, vf = (t.astype(jnp.float32) for t in (qb, kb, vb))
+            counts_s = jnp.einsum("thnd,thld->thnl", qf, kf)
+            p_s = counts_s / d
+            s = SP.bernoulli_st(p_s, jax.random.uniform(k1, p_s.shape))
+            counts_a = jnp.einsum("thnl,thld->thnd", s, vf)
+            p_a = jnp.clip(counts_a / float(i_max), 0.0, 1.0)
+            return SP.bernoulli_st(p_a, jax.random.uniform(k2, p_a.shape))
+
+        return jax.vmap(per_slot, in_axes=(0, 1, 1, 1), out_axes=1)(
+            slot_keys, q, k, v
+        )
+
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         return SP.lif(currents, SP.LIFParams(beta=beta, v_thresh=v_thresh))
 
@@ -195,6 +234,20 @@ class IntegerBackend:
         )
         return out.reshape(t, b, h, n, d)
 
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+        t, b, h, n1, d = q.shape
+        l = k.shape[3]
+        # same per-slot PRN convention as the pallas wrapper (bit-exactness)
+        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d, i_max)
+        g = b * t * h
+        out = KREF.ssa_decode_ref(
+            jnp.moveaxis(q, 1, 0).reshape(g, 1, d),
+            jnp.moveaxis(k, 1, 0).reshape(g, l, d),
+            jnp.moveaxis(v, 1, 0).reshape(g, l, d),
+            rs.reshape(g, 1, l), ra.reshape(g, 1, d),
+        )
+        return jnp.moveaxis(out.reshape(b, t, h, 1, d), 0, 1)
+
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         t = currents.shape[0]
         flat = currents.astype(jnp.float32).reshape(t, -1)
@@ -237,6 +290,11 @@ class PallasBackend:
     def ssa_attention(self, key, q, k, v, *, causal=False):
         return KOPS.ssa_attention_packed(
             q, k, v, key, causal=causal, interpret=self.interpret
+        )
+
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+        return KOPS.ssa_attention_decode_packed(
+            q, k, v, slot_keys, i_max=i_max, interpret=self.interpret
         )
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
@@ -301,18 +359,22 @@ class XpikeformerEngine:
     explicit ``params`` for functional use.
     """
 
-    cfg: SpikingConfig
-    task: str  # "vit" | "gpt"
+    cfg: Any  # SpikingConfig (paper models) or ModelConfig (task="lm")
+    task: str  # "vit" | "gpt" | "lm"
     backend: Backend
     sim: AIMCSim
     params: Any = None
+    # schedulers are cached per (slots, cache_len, moe_impl): their jitted
+    # decode/prefill closures are multi-second compiles worth keeping warm
+    _schedulers: Dict[Any, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     # -- construction --------------------------------------------------
 
     @classmethod
     def from_config(
         cls,
-        name_or_cfg: Union[str, SpikingConfig],
+        name_or_cfg: Union[str, SpikingConfig, Any],
         *,
         task: Optional[str] = None,
         backend: Union[str, Backend] = "reference",
@@ -320,18 +382,40 @@ class XpikeformerEngine:
         aimc_cfg: Optional[AM.AIMCConfig] = None,
         t_seconds: float = 0.0,
         gdc: bool = True,
+        reduced: bool = False,
         **backend_kwargs,
     ) -> "XpikeformerEngine":
+        """Build an engine from an arch name or config.
+
+        Names resolve against the paper models first
+        (``configs.xpikeformer.SPIKING_ARCHS`` — spiking ViT / GPT), then
+        against the generic LM-stack registry (``configs.registry`` —
+        ``task="lm"``, served via :meth:`generate` / :meth:`serve`);
+        ``reduced=True`` picks the registry arch's CPU smoke reduction.
+        A raw :class:`SpikingConfig` or ``ModelConfig`` is accepted too.
+        """
+        from repro.configs.base import ModelConfig
+
         if isinstance(name_or_cfg, str):
             from repro.configs.xpikeformer import SPIKING_ARCHS
+            from repro.configs.registry import ARCHS, get_config, reduced_config
 
-            if name_or_cfg not in SPIKING_ARCHS:
+            # "xpikeformer-gpt-*" names exist both as paper models and as
+            # LM-stack registry archs; task="lm" forces the registry.
+            if name_or_cfg in SPIKING_ARCHS and task != "lm":
+                task_, cfg = SPIKING_ARCHS[name_or_cfg]
+                task = task or task_
+            elif name_or_cfg in ARCHS:
+                cfg = reduced_config(name_or_cfg) if reduced else get_config(name_or_cfg)
+                task = task or "lm"
+            else:
                 raise KeyError(
-                    f"unknown engine arch {name_or_cfg!r}; "
-                    f"known: {sorted(SPIKING_ARCHS)}"
+                    f"unknown engine arch {name_or_cfg!r}; known: "
+                    f"{sorted(SPIKING_ARCHS)} + registry {sorted(ARCHS)}"
                 )
-            task_, cfg = SPIKING_ARCHS[name_or_cfg]
-            task = task or task_
+        elif isinstance(name_or_cfg, ModelConfig):
+            cfg = name_or_cfg
+            task = task or "lm"
         else:
             cfg = name_or_cfg
             if task is None:
@@ -347,6 +431,11 @@ class XpikeformerEngine:
 
     def init(self, key: Array):
         """Initialise (and store) model params."""
+        if self.task == "lm":
+            from repro.models import transformer as T
+
+            self.params = T.init_params(key, self.cfg)
+            return self.params
         init = ST.init_vit if self.task == "vit" else ST.init_gpt
         self.params = init(key, self.cfg)
         return self.params
@@ -365,18 +454,33 @@ class XpikeformerEngine:
     # -- forward -------------------------------------------------------
 
     def forward(self, x: Array, rng: Array, params: Any = None) -> Array:
-        """Full model forward: images -> class logits (vit) or feature
-        sequences -> per-token symbol logits (gpt)."""
+        """Full model forward: images -> class logits (vit), feature
+        sequences -> per-token symbol logits (gpt), or token ids [B,S] ->
+        next-token logits (lm)."""
         params = self.params if params is None else params
         assert params is not None, "call init() first or pass params"
+        if self.task == "lm":
+            from repro.models import transformer as T
+
+            logits, _ = T.forward(params, {"tokens": x}, self.cfg, rng=rng,
+                                  backend=self.backend, remat="none")
+            return logits
         fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
         return fwd(params, x, self.cfg, self.sim, rng, backend=self.backend)
 
     def jit_forward(self):
         """A jitted pure function ``(params, x, rng) -> logits`` over the
         engine's (cfg, sim, backend) — for serving / benchmarking loops."""
-        fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
         cfg, sim, backend = self.cfg, self.sim, self.backend
+        if self.task == "lm":
+            from repro.models import transformer as T
+
+            return jax.jit(
+                lambda params, x, rng: T.forward(
+                    params, {"tokens": x}, cfg, rng=rng, backend=backend,
+                    remat="none")[0]
+            )
+        fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
         return jax.jit(
             lambda params, x, rng: fwd(params, x, cfg, sim, rng, backend=backend)
         )
@@ -392,3 +496,69 @@ class XpikeformerEngine:
         """[B,L,feat] received-signal features -> [B,L] detected symbols."""
         assert self.task == "gpt", "detect_symbols() is the GPT/ICL task"
         return jnp.argmax(self.forward(feats, rng, params), axis=-1)
+
+    # -- serving (task="lm") -------------------------------------------
+
+    def scheduler(
+        self,
+        *,
+        slots: int = 4,
+        cache_len: int = 64,
+        params: Any = None,
+        pctx: Any = None,
+        moe_impl: Optional[str] = None,
+    ):
+        """A :class:`repro.serving.BatchScheduler` over this engine.
+
+        The scheduler's batched ``decode_step`` runs through this engine's
+        backend, so reference / integer / pallas serve identically (the
+        integer oracle is the bit-exactness contract).  Schedulers are
+        cached per (slots, cache_len, moe_impl) and reset on reuse, so
+        repeated :meth:`serve`/:meth:`generate` calls keep the compiled
+        decode/prefill functions warm."""
+        from repro.serving import BatchScheduler
+
+        assert self.task == "lm", "serving drives the generic LM stack (task='lm')"
+        params = self.params if params is None else params
+        assert params is not None, "call init() first or pass params"
+        key = (slots, cache_len, moe_impl)
+        sch = self._schedulers.get(key) if pctx is None else None
+        if sch is not None:
+            sch.reset()
+            sch.params = params
+            return sch
+        sch = BatchScheduler(
+            params, self.cfg, self.backend, slots=slots, cache_len=cache_len,
+            pctx=pctx, moe_impl=moe_impl,
+        )
+        if pctx is None:
+            self._schedulers[key] = sch
+        return sch
+
+    def serve(
+        self,
+        prompts,
+        max_new: int = 16,
+        *,
+        slots: int = 4,
+        cache_len: int = 64,
+        seed: int = 0,
+        params: Any = None,
+        pctx: Any = None,
+        moe_impl: Optional[str] = None,
+    ):
+        """Continuous-batching serve: prompts -> (outputs, ServeStats).
+
+        Every request gets the PRN stream ``seed + i`` so results are
+        reproducible and independent of batching/admission order."""
+        sch = self.scheduler(slots=slots, cache_len=cache_len, params=params,
+                             pctx=pctx, moe_impl=moe_impl)
+        rids = [sch.submit(p, max_new, seed=seed + i) for i, p in enumerate(prompts)]
+        outs = sch.run()
+        return [outs[r] for r in rids], sch.stats
+
+    def generate(self, prompts, max_new: int = 16, **kwargs):
+        """Batch decode: list of token-id prompts -> list of generated
+        token-id lists (greedy).  Thin wrapper over :meth:`serve`."""
+        outs, _ = self.serve(prompts, max_new, **kwargs)
+        return outs

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.kernels.aimc_matmul import aimc_spiking_linear_kernel
 from repro.kernels.lif import lif_kernel
-from repro.kernels.ssa_attention import ssa_attention_kernel
+from repro.kernels.ssa_attention import ssa_attention_kernel, ssa_decode_kernel
 
 Array = jax.Array
 
@@ -97,6 +97,71 @@ def ssa_attention_packed(
         qp, kp, vp, rs, ra, n=np_, d=dp_, causal=causal, interpret=interpret
     )
     return out[:, :n, :d].reshape(t, b, h, n, d)
+
+
+def draw_slot_decode_prns(
+    slot_keys: Array,  # [B, 2] uint32 — per-slot PRNG keys
+    t: int, h: int, l: int, d: int, i_max: int,
+) -> Tuple[Array, Array]:
+    """Per-slot comparator integers for one SSA decode step.
+
+    Each serving slot draws from its *own* key so the stream a request sees
+    depends only on (request seed, position) — never on which other
+    requests share the batch.  That is the bit-exactness contract of
+    continuous batching: admitting a request mid-flight cannot perturb the
+    spikes of already-running slots.  Returns ``(rs [B,T*H,1,L],
+    ra [B,T*H,1,D])`` with r_s ~ U{0..d-1}, r_a ~ U{0..i_max-1}.
+    """
+    def per_slot(key):
+        return draw_comparator_prns(key, (t * h, 1, l), (t * h, 1, d), d, i_max)
+
+    return jax.vmap(per_slot)(slot_keys)
+
+
+@partial(jax.jit, static_argnames=("i_max", "interpret"))
+def ssa_attention_decode_packed(
+    q: Array,  # [T, B, H, 1, D] binary — the new token's query spikes
+    k: Array,  # [T, B, H, L, D] cached key spike train (zeros beyond pos)
+    v: Array,  # [T, B, H, L, D] cached value spike train
+    slot_keys: Array,  # [B, 2] uint32 per-slot PRNG keys
+    *,
+    i_max: int,
+    interpret: bool = True,
+) -> Array:
+    """Bit-packed SSA decode step; returns uint8 spikes [T,B,H,1,D].
+
+    The serving entry point for the popcount SSA tile: one query row per
+    (slot, timestep, head) against that slot's cached KV train.  L and D
+    are zero-padded to multiples of 32 (zero spikes never beat a
+    comparator draw, exactly the :func:`ssa_attention_packed` argument);
+    the comparator PRNs are drawn per slot at logical shapes so the output
+    is bit-identical to the unpadded integer oracle — and independent of
+    which other slots are in flight.
+    """
+    t, b, h, n1, d = q.shape
+    l = k.shape[3]
+    rs, ra = draw_slot_decode_prns(slot_keys, t, h, l, d, i_max)
+    g = b * t * h
+    # grid order (b, t, h): matches the [B, T*H, ...] PRN layout
+    qf = jnp.moveaxis(q, 1, 0).reshape(g, 1, d).astype(jnp.uint8)
+    kf = jnp.moveaxis(k, 1, 0).reshape(g, l, d).astype(jnp.uint8)
+    vf = jnp.moveaxis(v, 1, 0).reshape(g, l, d).astype(jnp.uint8)
+    rs = rs.reshape(g, 1, l)
+    ra = ra.reshape(g, 1, d)
+    l_pad = (-l) % 32
+    d_pad = (-d) % 32
+    if l_pad or d_pad:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, d_pad)))
+        kf = jnp.pad(kf, ((0, 0), (0, l_pad), (0, d_pad)))
+        vf = jnp.pad(vf, ((0, 0), (0, l_pad), (0, d_pad)))
+        rs = jnp.pad(rs, ((0, 0), (0, 0), (0, l_pad)))
+        ra = jnp.pad(ra, ((0, 0), (0, 0), (0, d_pad)))
+    qp = pack_bits(qf, axis=-1)  # [G, 1, D/32]
+    kp = pack_bits(kf, axis=-1)  # [G, L, D/32]
+    vp = pack_bits(vf, axis=-2)  # [G, L/32, D]
+    out = ssa_decode_kernel(qp, kp, vp, rs, ra, interpret=interpret)
+    out = out[:, :, :d].reshape(b, t, h, 1, d)
+    return jnp.moveaxis(out, 0, 1)
 
 
 @partial(jax.jit, static_argnames=("beta", "v_thresh", "interpret"))

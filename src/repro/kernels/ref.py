@@ -36,6 +36,32 @@ def ssa_attention_ref(
     return (counts_a > ra).astype(jnp.uint8)
 
 
+def ssa_decode_ref(
+    q: Array,  # [G, 1, D] binary int — the new token's query spikes
+    k: Array,  # [G, L, D] cached key spike train (zero rows beyond pos)
+    v: Array,  # [G, L, D] cached value spike train
+    rs: Array,  # [G, 1, L] int32 in [0, D)
+    ra: Array,  # [G, 1, D] int32 in [0, I_max)
+) -> Array:
+    """Bit-exact one-query SSA decode against a cached spike-train KV.
+
+    The serving counterpart of :func:`ssa_attention_ref`: one stochastic
+    attention row (the token being decoded) against the slot's whole KV
+    cache.  No explicit validity mask is needed — positions beyond the
+    slot's ``pos`` hold zero spikes, whose AND-counts are 0 and can never
+    beat a non-negative comparator draw.  The output comparator range
+    ``I_max`` is the *cache capacity* (the hardware tile dimension), fixed
+    per §IV-B-2 regardless of how many cached tokens are valid.
+    """
+    qi = q.astype(jnp.int32)
+    ki = k.astype(jnp.int32)
+    vi = v.astype(jnp.int32)
+    counts_s = jnp.einsum("gnd,gld->gnl", qi, ki)
+    s = (counts_s > rs).astype(jnp.int32)
+    counts_a = jnp.einsum("gnl,gld->gnd", s, vi)
+    return (counts_a > ra).astype(jnp.uint8)
+
+
 def lif_ref(currents: Array, *, beta: float = 0.5, v_thresh: float = 1.0) -> Array:
     """[T, M] currents -> [T, M] uint8 spikes (Eqs. 2-3)."""
 

@@ -76,6 +76,62 @@ def _ssa_kernel(qp_ref, kp_ref, vp_ref, rs_ref, ra_ref, out_ref, *, n: int, d: i
     out_ref[0] = (counts_a > ra_ref[0]).astype(jnp.uint8)
 
 
+def _ssa_decode_body(qp_ref, kp_ref, vp_ref, rs_ref, ra_ref, out_ref):
+    """One (b, t, h) decode cell: a single stochastic attention row.
+
+    qp [1, Wd] u32   — the new token's query spikes, packed along d_k
+    kp [L, Wd] u32   — cached key train, packed along d_k
+    vp [Wl, D] u32   — cached value train, packed along the cache axis
+    rs [1, L] i32    — LFSR integers for the score comparators
+    ra [1, D] i32    — LFSR integers for the output comparators
+    out [1, D] u8    — the token's binary attention output
+
+    Invalid (not-yet-written / freed) cache rows are all-zero, so their
+    AND-counts are 0 and never beat a comparator draw — validity masking
+    is implicit, which is what lets one fixed-shape kernel serve every
+    slot of a continuous batch regardless of per-slot position.
+    """
+    qp = qp_ref[0]  # [1, Wd]
+    kp = kp_ref[0]  # [L, Wd]
+    # stage 1: counts[j] = popcount_d(q & k_j)
+    anded = qp & kp  # [L, Wd] (q broadcast over cache rows)
+    counts_s = jnp.sum(_popcount(anded), axis=-1).astype(jnp.int32)[None, :]
+    s = (counts_s > rs_ref[0]).astype(jnp.int32)  # [1, L]
+    # stage 2: pack S along the cache axis, AND with packed V, popcount
+    sp = _pack_bits_kernel_axis(s)  # [1, Wl]
+    anded2 = jnp.swapaxes(sp, 0, 1) & vp_ref[0]  # [Wl, D]
+    counts_a = jnp.sum(_popcount(anded2), axis=0).astype(jnp.int32)[None, :]
+    out_ref[0] = (counts_a > ra_ref[0]).astype(jnp.uint8)
+
+
+def ssa_decode_kernel(
+    qp: Array,  # [G, 1, Wd] u32  (G = B*T*H fused grid axis)
+    kp: Array,  # [G, L, Wd] u32
+    vp: Array,  # [G, Wl, D] u32
+    rs: Array,  # [G, 1, L] i32
+    ra: Array,  # [G, 1, D] i32
+    *,
+    interpret: bool = False,
+) -> Array:
+    g, l, wd = kp.shape
+    wl = vp.shape[1]
+    d = vp.shape[2]
+    return pl.pallas_call(
+        _ssa_decode_body,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, 1, wd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l, wd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, wl, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 1, d), jnp.uint8),
+        interpret=interpret,
+    )(qp, kp, vp, rs, ra)
+
+
 def ssa_attention_kernel(
     qp: Array,  # [G, N, Wd] u32  (G = T*B*H fused grid axis)
     kp: Array,  # [G, N, Wd] u32

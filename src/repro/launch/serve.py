@@ -1,12 +1,16 @@
-"""Batched serving driver: continuous-batching decode loop.
+"""Serving launcher: continuous-batching inference over any --arch.
 
     python -m repro.launch.serve --arch yi-9b --requests 8
+    python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --backend pallas
 
-A miniature vLLM-style loop over the framework's ``prefill`` +
-``decode_step``: requests arrive with different prompt lengths, get
-prefilled into per-slot KV caches, then a single fused ``decode_step``
-advances every active slot each iteration; finished slots are refilled
-from the queue (continuous batching).  Greedy sampling.
+Thin CLI over the ``repro.serving`` subsystem: a :class:`~repro.serving.
+BatchScheduler` splices requests into free slots mid-flight (continuous
+batching), keeps per-slot state in a :class:`~repro.serving.DecodeState`
+pytree, and advances every slot with one jit-compiled batched
+``decode_step``.  Spiking SSA archs decode through the engine's pluggable
+backend (reference / integer / pallas) over spike-train KV caches; all
+other archs use the conventional float KV / recurrent-state path.  Greedy
+sampling.
 """
 
 from __future__ import annotations
@@ -20,10 +24,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ParallelConfig
 from repro.configs.registry import get_config, reduced_config
-from repro.models import transformer as T
-from repro.models.moe import ParallelCtx
+from repro.engine import get_backend
 from repro.launch.mesh import make_test_mesh
+from repro.models import transformer as T
 from repro.parallel import sharding as SH
+from repro.serving import BatchScheduler
 
 
 def serve(
@@ -35,95 +40,41 @@ def serve(
     max_new: int = 16,
     cache_len: int = 64,
     seed: int = 0,
+    backend: str = "reference",
 ):
+    """Serve ``n_requests`` synthetic prompts; returns their outputs in
+    submission order (continuous batching: a finished slot is refilled from
+    the queue without draining the batch)."""
     cfg = reduced_config(arch) if smoke else get_config(arch)
     if cfg.frontend != "none":
         print(f"[serve] {arch} is a {cfg.family} backbone; serving over stub embeddings")
-    if cfg.spiking:
-        print(f"[serve] {arch} is a spiking arch; decode serves its rate "
-              "(ANN-equivalent) network — spike-train decode has no KV-cache path")
+    if cfg.spiking and cfg.attention_kind == "ssa":
+        print(f"[serve] {arch} decodes through the '{backend}' backend over "
+              "spike-train KV caches (SSA serving path)")
     mesh = make_test_mesh((1, 1))
     parallel = ParallelConfig(moe_impl="ep_a2a" if cfg.is_moe else "dense")
     pctx = SH.make_pctx(mesh, parallel)
-    key = jax.random.PRNGKey(seed)
-    params = T.init_params(key, cfg)
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
 
-    step = lambda p, c, t: T.decode_step(p, c, t, cfg, pctx, moe_impl=parallel.moe_impl)
-    decode = jax.jit(step)  # batched over all slots
-    decode1 = jax.jit(step)  # batch-1 prefill trace (separate shape cache)
-
-    # request queue: random prompts of varying length
+    sch = BatchScheduler(
+        params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
+        pctx=pctx, moe_impl=parallel.moe_impl,
+    )
     rng = jax.random.PRNGKey(seed + 1)
-    queue: List[jnp.ndarray] = [
+    prompts: List[jnp.ndarray] = [
         jax.random.randint(jax.random.fold_in(rng, i), (int(4 + 3 * (i % 4)),), 0,
                            cfg.vocab_size, jnp.int32)
         for i in range(n_requests)
     ]
-    cache = T.init_cache(cfg, slots, cache_len)
-    tokens = jnp.zeros((slots, 1), jnp.int32)
-    remaining = [0] * slots
-    outputs: List[List[int]] = []
-    slot_out: List[List[int]] = [[] for _ in range(slots)]
-    served = 0
+    rids = [sch.submit(p, max_new, seed=seed + i) for i, p in enumerate(prompts)]
     t0 = time.time()
-    decoded_tokens = 0
-
-    def assign_slot(full, one, slot):
-        """Write a batch-1 cache into slot ``slot`` of the batched cache.
-
-        Period-stacked leaves are [n_periods, batch, ...]; remainder leaves
-        are [batch, ...].  Per-slot ``pos`` counters make this sound: the
-        new request resumes from its own prefill position while the other
-        slots keep decoding at theirs."""
-        out = {}
-        if "periods" in full:
-            out["periods"] = jax.tree.map(
-                lambda f, o: f.at[:, slot].set(o[:, 0]), full["periods"], one["periods"]
-            )
-        if "remainder" in full:
-            out["remainder"] = jax.tree.map(
-                lambda f, o: f.at[slot].set(o[0]), full["remainder"], one["remainder"]
-            )
-        return out
-
-    def feed(slot):
-        nonlocal tokens, cache
-        prompt = queue.pop(0)
-        # prefill: step the whole prompt context through a batch-1 cache,
-        # then splice it into this slot (a production server would lower a
-        # batched prefill kernel; the cache/positions logic is identical)
-        c1 = T.init_cache(cfg, 1, cache_len)
-        for tok in prompt[:-1]:
-            _, c1 = decode1(params, c1, jnp.full((1, 1), int(tok), jnp.int32))
-        cache = assign_slot(cache, c1, slot)
-        tokens = tokens.at[slot, 0].set(int(prompt[-1]))
-        return int(len(prompt))
-
-    for s in range(slots):
-        if queue:
-            remaining[s] = max_new
-            feed(s)
-
-    while any(r > 0 for r in remaining):
-        logits, cache = decode(params, cache, tokens)
-        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-        tokens = nxt[:, None]
-        decoded_tokens += sum(1 for r in remaining if r > 0)
-        for s in range(slots):
-            if remaining[s] > 0:
-                slot_out[s].append(int(nxt[s]))
-                remaining[s] -= 1
-                if remaining[s] == 0:
-                    outputs.append(slot_out[s])
-                    slot_out[s] = []
-                    served += 1
-                    if queue:
-                        remaining[s] = max_new
-                        feed(s)
+    outs = sch.run()
     dt = time.time() - t0
-    print(f"[serve] served {served} requests, {decoded_tokens} tokens in {dt:.2f}s "
-          f"({decoded_tokens/max(dt,1e-9):.1f} tok/s)")
-    return outputs
+    st = sch.stats
+    print(f"[serve] served {st.requests} requests, {st.decoded_tokens} tokens "
+          f"in {dt:.2f}s ({st.decoded_tokens/max(dt,1e-9):.1f} tok/s, "
+          f"{st.decode_steps} batched decode steps, {st.admissions} admissions)")
+    return [outs[r] for r in rids]
 
 
 def main(argv=None):
@@ -132,8 +83,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "integer", "pallas"])
+    ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     a = ap.parse_args(argv)
-    serve(a.arch, n_requests=a.requests, slots=a.slots, max_new=a.max_new)
+    serve(a.arch, smoke=a.smoke, n_requests=a.requests, slots=a.slots,
+          max_new=a.max_new, cache_len=a.cache_len, backend=a.backend)
 
 
 if __name__ == "__main__":

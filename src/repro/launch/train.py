@@ -56,7 +56,18 @@ def run(
     seed: int = 0,
     log_every: int = 10,
     lr: float = 1e-3,
+    probe: bool = False,
 ):
+    """Train ``arch`` for ``steps``; returns the per-step loss list.
+
+    With ``probe=True`` returns ``(losses, probe_before, probe_after)``
+    where the probes are the loss on a *fixed* batch (step 0's) with a
+    fixed rng, evaluated before and after training.  Per-step losses are
+    each measured on a fresh batch, so for smoke configs whose init sits
+    near the stream's entropy floor (tied-embedding archs start
+    calibrated) the first-vs-last comparison is dominated by inter-batch
+    noise — the fixed-batch probe isolates the optimization signal.
+    """
     cfg = reduced_config(arch) if smoke else get_config(arch)
     mesh = make_test_mesh(tuple(mesh_shape))
     parallel = ParallelConfig(moe_impl="ep_a2a" if cfg.is_moe else "dense", remat="none")
@@ -77,6 +88,19 @@ def run(
         print(f"[train] restored step {start_step} from {ckpt_dir}", flush=True)
 
     step_fn = jax.jit(TL.make_train_step(cfg, pctx, parallel, opt))
+
+    probe_fn = None
+    probe_before = None
+    if probe:
+        from repro.models import transformer as T
+
+        probe_batch = data.batch_at(0)
+        probe_rng = jax.random.PRNGKey(seed + 555)
+        probe_fn = jax.jit(
+            lambda p: T.loss_fn(p, probe_batch, cfg, pctx, moe_impl=parallel.moe_impl,
+                                remat="none", rng=probe_rng)[0]
+        )
+        probe_before = float(probe_fn(params))
 
     times, losses, stragglers = [], [], 0
     for step in range(start_step, steps):
@@ -103,6 +127,10 @@ def run(
             mgr.save(step + 1, (params, opt_state))
     mgr.save(steps, (params, opt_state), blocking=True)
     print(f"[train] done: final loss {losses[-1]:.4f}, stragglers {stragglers}", flush=True)
+    if probe:
+        probe_after = float(probe_fn(params))
+        print(f"[train] probe loss {probe_before:.4f} -> {probe_after:.4f}", flush=True)
+        return losses, probe_before, probe_after
     return losses
 
 

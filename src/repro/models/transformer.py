@@ -434,7 +434,36 @@ def loss_fn(
 # ---------------------------------------------------------------------------
 
 
+def spiking_attention_cache_schema(cfg: ModelConfig, batch: int, seq_len: int):
+    """Per-slot spiking KV cache: binary K/V spike trains per position.
+
+    Unlike the ANN cache (one vector per position) the SSA engine caches the
+    whole ``spike_T``-step spike train of every key/value token — the
+    serving analogue of the hardware streaming 1-bit K/V planes through the
+    attention tile.  uint8 storage, so the cache is *smaller* than the ANN
+    float cache whenever ``spike_T < 4 * bytes_per_float``.  Positions
+    beyond ``pos`` are all-zero, which masks them out of the SSA comparators
+    for free (zero AND-counts never spike)."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "sk": jax.ShapeDtypeStruct((batch, cfg.spike_T, seq_len, kv, hd), jnp.uint8),
+        "sv": jax.ShapeDtypeStruct((batch, cfg.spike_T, seq_len, kv, hd), jnp.uint8),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def _spiking_decode_enabled(cfg: ModelConfig) -> bool:
+    """Spiking serve path: SSA attention decodes over spike-train KV caches.
+
+    Other spiking attention kinds (``lif``) keep the rate (ANN-equivalent)
+    decode path — their attention is membrane-stateful across timesteps and
+    has no streaming tile in the paper."""
+    return cfg.spiking and cfg.attention_kind == "ssa"
+
+
 def _block_cache_schema(cfg: ModelConfig, mixer: str, batch: int, seq_len: int):
+    if mixer in ("attn", "local") and _spiking_decode_enabled(cfg):
+        return spiking_attention_cache_schema(cfg, batch, seq_len)
     if mixer == "attn":
         return L.attention_cache_schema(cfg, batch, seq_len)
     if mixer == "local":
@@ -480,11 +509,171 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *, filled: int = 0):
     return jax.tree.map(zero, cache_schema(cfg, batch, seq_len))
 
 
+# ---------------------------------------------------------------------------
+# Spiking decode (SSA serving path)
+# ---------------------------------------------------------------------------
+
+
+def _first_pos(cache) -> Array:
+    """The per-slot position counters ([B] int32) from the first block."""
+    if "periods" in cache:
+        return cache["periods"]["blk0"]["pos"][0]
+    return cache["remainder"]["blk0"]["pos"]
+
+
+def _slot_base_keys(seeds: Array, pos: Array) -> Array:
+    """Per-slot PRNG keys for one decode step: f(request seed, position).
+
+    ``jnp.stack([0, seed])`` is exactly ``jax.random.PRNGKey(seed)`` for
+    32-bit seeds, so a request's spike randomness depends only on its own
+    (seed, position) — never on batch composition.  This is what makes
+    continuous-batching admission bit-exact for already-running slots."""
+    base = jnp.stack([jnp.zeros_like(seeds), seeds], axis=-1).astype(jnp.uint32)
+    return jax.vmap(jax.random.fold_in)(base, pos)
+
+
+def _slot_rate_encode(keys: Array, x: Array, t: int) -> Array:
+    """Per-slot Bernoulli rate coding: x [B,1,d] -> spikes [T,B,1,d]."""
+    return jax.vmap(
+        lambda kk, xb: SP.rate_encode(kk, jax.nn.sigmoid(xb.astype(jnp.float32)), t),
+        in_axes=(0, 0), out_axes=1,
+    )(keys, x)
+
+
+def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
+                              slot_keys: Array, backend):
+    """One-token SSA decode against the slot's cached K/V spike trains.
+
+    s [T,B,1,d] is the new token's spike train.  The Q/K/V/O projections are
+    the backend's spiking linears (same primitives as prefill/forward); the
+    new K/V trains are scattered into the per-slot cache at ``pos`` and the
+    query attends to the whole cache — zero (unwritten / freed) positions
+    mask themselves out of the comparators."""
+    t, b, _, d = s.shape
+    h, hd, kv = cfg.num_heads, cfg.resolved_head_dim, cfg.num_kv_heads
+
+    def proj(w):  # LIF(W s^t) -> [T,B,heads,hd]
+        out = backend.spiking_linear(None, w.astype(jnp.float32).reshape(d, -1), s)
+        return out.reshape(t, b, -1, hd)
+
+    q = proj(params["wq"])  # [T,B,H,hd]
+    k_new = proj(params["wk"])  # [T,B,KV,hd]
+    v_new = proj(params["wv"])
+    pos = jnp.broadcast_to(cache["pos"], (b,))
+    barange = jnp.arange(b)
+    sk = cache["sk"].at[barange, :, pos].set(
+        jnp.moveaxis(k_new, 0, 1).astype(jnp.uint8))
+    sv = cache["sv"].at[barange, :, pos].set(
+        jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
+    lcap = sk.shape[2]
+    # [B,T,L,KV,hd] -> [T,B,KV,L,hd] -> GQA repeat -> [T,B,H,L,hd]
+    kf = jnp.transpose(sk, (1, 0, 3, 2, 4))
+    vf = jnp.transpose(sv, (1, 0, 3, 2, 4))
+    if kv != h:
+        rep = h // kv
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    a = backend.ssa_attention_decode(slot_keys, q[:, :, :, None, :], kf, vf,
+                                     i_max=lcap)
+    a = a.reshape(t, b, 1, h * hd).astype(s.dtype)
+    out = backend.spiking_linear(
+        None, params["wo"].astype(jnp.float32).reshape(h * hd, -1), a)
+    return out, {"sk": sk, "sv": sv, "pos": pos + 1}
+
+
+def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
+                                pctx: ParallelCtx, mixer: str, slot_keys: Array,
+                                uid, backend):
+    """Spiking residual block, decode flavour (mirrors _apply_block_spiking)."""
+
+    def keys_for(tag):
+        return jax.vmap(lambda kk: jax.random.fold_in(kk, tag + uid))(slot_keys)
+
+    if mixer in ("attn", "local"):
+        h, cache = _spiking_attention_decode(
+            params["mixer"], s, cache, cfg, keys_for(1), backend)
+        s = s + h.astype(s.dtype)
+    else:
+        # attention-free mixers run on the rate interface (as in the forward)
+        rate = SP.rate_decode(s.astype(jnp.float32)).astype(model_dtype(cfg))
+        if mixer == "ssd":
+            y, cache = S.ssd_decode(params["mixer"], rate, cache, cfg)
+        else:
+            y, cache = R.rglru_decode(params["mixer"], rate, cache, cfg)
+        s = s + _slot_rate_encode(keys_for(100003), y, s.shape[0])
+    if "norm2" in params:
+        if "moe" in params:
+            rate = SP.rate_decode(s.astype(jnp.float32)).astype(model_dtype(cfg))
+            ym, _ = M.moe_apply(params["moe"], rate, cfg, pctx, impl="dense")
+            s = s + _slot_rate_encode(keys_for(200003), ym, s.shape[0])
+        else:
+            h1 = backend.spiking_linear(
+                None, params["mlp"]["wi"].astype(jnp.float32), s)
+            s = s + backend.spiking_linear(
+                None, params["mlp"]["wo"].astype(jnp.float32),
+                h1.astype(s.dtype)).astype(s.dtype)
+    return s, cache
+
+
+def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
+                         pctx: ParallelCtx, backend, seeds: Array):
+    """One spiking decode step, entirely through the backend's primitives.
+
+    tokens [B,1], seeds [B] uint32 (per-slot request stream ids) ->
+    (logits [B,1,V], new cache).  All sampling (rate coding, SSA
+    comparators) is keyed per slot by f(seed, pos), so a slot's output
+    stream is invariant to which other requests share the batch."""
+    dt = model_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dt) * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+    pos0 = _first_pos(cache)
+    slot_keys = _slot_base_keys(seeds, pos0)
+    enc_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 0))(slot_keys)
+    s = _slot_rate_encode(enc_keys, x, cfg.spike_T)  # [T,B,1,d] float32
+
+    new_cache: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        def period_body(s, xs):
+            pp, pc, pidx = xs
+            nc = {}
+            for i, mixer in enumerate(cfg.block_pattern):
+                s, c = _apply_block_spiking_decode(
+                    pp[f"blk{i}"], s, pc[f"blk{i}"], cfg, pctx, mixer,
+                    slot_keys, pidx * cfg.period + i, backend)
+                nc[f"blk{i}"] = c
+            return s, nc
+
+        s, new_cache["periods"] = lax.scan(
+            period_body, s,
+            (params["periods"], cache["periods"], jnp.arange(cfg.num_periods)))
+    if cfg.remainder_layers:
+        rem = {}
+        base_uid = cfg.num_periods * cfg.period
+        for i in range(cfg.remainder_layers):
+            s, c = _apply_block_spiking_decode(
+                params["remainder"][f"blk{i}"], s, cache["remainder"][f"blk{i}"],
+                cfg, pctx, cfg.block_pattern[i], slot_keys, base_uid + i, backend)
+            rem[f"blk{i}"] = c
+        new_cache["remainder"] = rem
+    xr = SP.rate_decode(s.astype(jnp.float32)).astype(dt)
+    logits = _unembed(params, xr, cfg)
+    return logits, new_cache
+
+
 def decode_step(
     params, cache, tokens: Array, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
-    *, moe_impl: str = "ep_a2a",
+    *, moe_impl: str = "ep_a2a", backend=None, seeds: Optional[Array] = None,
 ):
-    """One decoding step. tokens [B,1] -> (logits [B,1,V], new cache)."""
+    """One decoding step. tokens [B,1] -> (logits [B,1,V], new cache).
+
+    Spiking SSA configs decode through the pluggable backend's spiking
+    primitives over spike-train KV caches (``seeds [B]`` supplies the
+    per-slot PRN stream ids; defaults to zeros).  All other configs use the
+    conventional float decode path and ignore ``backend``/``seeds``."""
+    if _spiking_decode_enabled(cfg):
+        if seeds is None:
+            seeds = jnp.zeros((tokens.shape[0],), jnp.uint32)
+        return _decode_step_spiking(params, cache, tokens, cfg, pctx,
+                                    backend or _default_backend(), seeds)
     dt = model_dtype(cfg)
     x = L.embed(params["embed"], tokens, dt) * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
 

@@ -172,6 +172,16 @@ def cache_pspecs(cfg, mesh: Optional[Mesh], batch: int, seq_len: int):
 
     def block_spec(mixer: str):
         if mixer in ("attn", "local"):
+            if T._spiking_decode_enabled(cfg):
+                # spiking KV trains [B, spike_T, L, KV, hd]: batch over
+                # (pod, data); the cache axis stays replicated — the SSA
+                # comparators reduce over all of L every step and the
+                # per-slot scatter would cross shards
+                return {
+                    "sk": P(b, None, None, None, None),
+                    "sv": P(b, None, None, None, None),
+                    "pos": P(),
+                }
             L = min(cfg.window_size, seq_len) if mixer == "local" else seq_len
             s = "model" if ("model" in sizes and L % sizes["model"] == 0) else None
             kd = None

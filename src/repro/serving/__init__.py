@@ -1,0 +1,40 @@
+"""Continuous-batching serving subsystem for the Xpikeformer engine.
+
+Architecture (see README "Serving"):
+
+    BatchScheduler  — admission / eviction over a request queue
+        |
+    DecodeState     — slot-major cache pytree (spiking KV trains or ANN KV /
+        |             recurrent state) + per-slot tokens / seeds / occupancy
+        |
+    decode_step     — ONE jit-compiled batched step through the engine's
+                      pluggable Backend (reference / integer / pallas)
+"""
+
+from repro.serving.scheduler import BatchScheduler, Request, ServeStats
+from repro.serving.state import (
+    DecodeState,
+    init_state,
+    make_decode_fn,
+    make_prefill_fn,
+    release_slot,
+    slot_slice,
+    slot_splice,
+    slot_zero,
+    splice_request,
+)
+
+__all__ = [
+    "BatchScheduler",
+    "Request",
+    "ServeStats",
+    "DecodeState",
+    "init_state",
+    "make_decode_fn",
+    "make_prefill_fn",
+    "release_slot",
+    "slot_slice",
+    "slot_splice",
+    "slot_zero",
+    "splice_request",
+]

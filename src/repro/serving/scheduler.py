@@ -1,0 +1,228 @@
+"""BatchScheduler: continuous-batching request scheduler over DecodeState.
+
+A miniature vLLM-style serving loop for the Xpikeformer engine:
+
+* **admission** — pending requests splice into free slots *mid-flight*
+  (prefilled batch-1 through the same decode path, then scattered into the
+  batch), so the running slots never wait for the batch to drain.  Per-slot
+  PRN stream ids + per-slot position counters make admission bit-exact for
+  already-running slots: a request's token stream is a pure function of
+  (params, prompt, seed), never of batch composition.
+* **eviction** — finished (or explicitly evicted) slots release their state:
+  cache leaves are zeroed, which both frees the logical page and masks the
+  slot out of the spiking comparators.
+* **decode** — one jit-compiled batched ``decode_step`` advances every slot;
+  the scheduler only does O(slots) host bookkeeping per step.
+
+The decode math runs through the engine's pluggable :class:`~repro.engine.
+Backend` for spiking SSA configs (reference / integer / pallas serve
+identically — the integer oracle is the correctness contract) and the
+conventional float path otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.moe import ParallelCtx
+from repro.serving import state as ST
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Array  # [P] int32
+    max_new: int
+    seed: int
+
+
+@dataclasses.dataclass
+class ServeStats:
+    requests: int = 0
+    decode_steps: int = 0
+    decoded_tokens: int = 0
+    prefill_tokens: int = 0
+    admissions: int = 0
+    evictions: int = 0
+    wall_s: float = 0.0  # whole serve loop (admission/prefill included)
+    decode_s: float = 0.0  # batched decode_step calls only
+
+    @property
+    def tokens_per_sec(self) -> float:
+        """End-to-end decoded-token throughput (prefill time included)."""
+        return self.decoded_tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def decode_tokens_per_sec(self) -> float:
+        """Decode-phase throughput: tokens per second spent inside the
+        batched ``decode_step`` — the batching win, independent of how
+        prompts were prefilled (the batch-1 prefill scan is the same work
+        in any slot configuration)."""
+        return self.decoded_tokens / max(self.decode_s, 1e-9)
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    """Pad prompt lengths to power-of-two buckets (one prefill compile each)."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class BatchScheduler:
+    """Continuous-batching scheduler: submit prompts, run, collect outputs.
+
+    Greedy decoding; a request finishes after ``max_new`` tokens.  Outputs
+    are collected in :attr:`outputs` (rid -> list of generated token ids).
+    """
+
+    def __init__(
+        self,
+        params: Any,
+        cfg,
+        backend=None,
+        *,
+        slots: int = 4,
+        cache_len: int = 64,
+        pctx: Optional[ParallelCtx] = None,
+        moe_impl: Optional[str] = None,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend
+        self.slots = slots
+        self.cache_len = cache_len
+        self.pctx = pctx or ParallelCtx()
+        self.moe_impl = moe_impl or ("ep_a2a" if cfg.is_moe else "dense")
+        self.state = ST.init_state(cfg, slots, cache_len)
+        self._decode = ST.make_decode_fn(cfg, self.pctx, backend, self.moe_impl)
+        self._prefill = ST.make_prefill_fn(cfg, self.pctx, backend, self.moe_impl)
+        self._queue: Deque[Request] = deque()
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self._remaining: List[int] = [0] * slots
+        self.outputs: Dict[int, List[int]] = {}
+        self.stats = ServeStats()
+        self._next_rid = 0
+
+    def reset(self) -> None:
+        """Drop all requests and state but keep the compiled step functions
+        (fresh server, warm jit cache — used by benchmarks and tests)."""
+        self.state = ST.init_state(self.cfg, self.slots, self.cache_len)
+        self._queue.clear()
+        self._slot_req = [None] * self.slots
+        self._remaining = [0] * self.slots
+        self.outputs = {}
+        self.stats = ServeStats()
+
+    # -- request intake ------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new: int, seed: Optional[int] = None) -> int:
+        """Queue a request; returns its rid.  ``seed`` fixes the request's
+        spike PRN stream (defaults to the rid) — the same (prompt, seed)
+        decodes identically no matter how it is batched."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        assert prompt.ndim == 1 and prompt.shape[0] >= 1, "prompt must be [P>=1]"
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if prompt.shape[0] + max_new > self.cache_len:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new ({max_new}) exceeds "
+                f"cache_len ({self.cache_len})"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, prompt, max_new,
+                                   rid if seed is None else seed))
+        self.stats.requests += 1
+        return rid
+
+    # -- slot management -----------------------------------------------
+
+    def admit(self) -> int:
+        """Splice queued requests into free slots (continuous batching).
+
+        Prefills each admitted prompt through a batch-1 scan of the same
+        decode path, then scatters the filled cache into the slot while
+        the other slots' state is untouched.  Returns #admitted."""
+        admitted = 0
+        for slot in range(self.slots):
+            if not self._queue or self._slot_req[slot] is not None:
+                continue
+            req = self._queue.popleft()
+            p = req.prompt
+            n_ctx = int(p.shape[0]) - 1  # last prompt token feeds the first decode
+            padded = _bucket(max(n_ctx, 1))
+            prompt_pad = jnp.zeros((padded,), jnp.int32).at[:n_ctx].set(p[:-1])
+            cache1 = T.init_cache(self.cfg, 1, self.cache_len)
+            cache1 = self._prefill(
+                self.params, prompt_pad, jnp.int32(n_ctx),
+                jnp.uint32(req.seed), cache1,
+            )
+            self.state = ST.splice_request_jit(
+                self.state, slot, cache1, p[-1], jnp.uint32(req.seed))
+            self._slot_req[slot] = req
+            self._remaining[slot] = req.max_new
+            self.outputs[req.rid] = []
+            self.stats.prefill_tokens += n_ctx
+            self.stats.admissions += 1
+            admitted += 1
+        return admitted
+
+    def evict(self, slot: int, requeue: bool = False) -> None:
+        """Release a slot's state (zero cache pages, clear occupancy).
+
+        With ``requeue=True`` the in-flight request restarts from its
+        prompt on a later admission (preemption); otherwise its collected
+        output is kept as-is."""
+        req = self._slot_req[slot]
+        if req is not None and requeue:
+            self._queue.appendleft(req)
+            self.outputs.pop(req.rid, None)
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        self.state = ST.release_slot_jit(self.state, slot)
+        self.stats.evictions += 1
+
+    # -- serving loop --------------------------------------------------
+
+    def step(self) -> int:
+        """Admit, then advance every active slot one token.  Returns the
+        number of tokens decoded (0 when idle)."""
+        self.admit()
+        if not any(r is not None for r in self._slot_req):
+            return 0
+        t0 = time.time()
+        logits, self.state = self._decode(self.params, self.state)
+        nxt = np.asarray(self.state.tokens)  # syncs the step
+        self.stats.decode_s += time.time() - t0
+        self.stats.decode_steps += 1
+        decoded = 0
+        for slot in range(self.slots):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            self.outputs[req.rid].append(int(nxt[slot]))
+            decoded += 1
+            self._remaining[slot] -= 1
+            if self._remaining[slot] == 0:
+                self.evict(slot)
+        self.stats.decoded_tokens += decoded
+        return decoded
+
+    def run(self) -> Dict[int, List[int]]:
+        """Serve until the queue and all slots drain; returns outputs."""
+        t0 = time.time()
+        while self._queue or any(r is not None for r in self._slot_req):
+            self.step()
+        self.stats.wall_s += time.time() - t0
+        return self.outputs

@@ -1,0 +1,188 @@
+"""DecodeState: the per-slot serving state pytree + slot alloc/free ops.
+
+The serving analogue of a paged KV cache: one :class:`DecodeState` holds the
+whole continuous batch — the model cache pytree (ANN float KV / recurrent
+state, or binary spike-train KV for SSA configs), the next input token per
+slot, the per-slot PRN stream ids, and the slot occupancy mask.  Every leaf
+is slot-major, so admission and eviction are O(slot) scatter updates while
+the jitted ``decode_step`` keeps one fixed shape for the lifetime of the
+server.
+
+Cache leaves come in two stackings (see ``models/transformer.py``):
+``periods`` leaves are ``[n_periods, slots, ...]`` (layer-scanned) and
+``remainder`` leaves are ``[slots, ...]`` — the slot helpers below absorb
+that split so callers never touch it.
+
+Freed slots are *zeroed*, not just masked: for spiking SSA caches a zero
+K/V train is what masks the slot's stale positions out of the hardware
+comparators (zero AND-counts never spike), and for ANN caches ``pos = 0``
+makes stale keys unreachable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import transformer as T
+from repro.models.moe import ParallelCtx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """One continuous batch: model cache + per-slot serving counters.
+
+    cache   — model cache pytree (per-slot ``pos`` counters inside leaves)
+    tokens  — [slots] int32, next input token per slot
+    seeds   — [slots] uint32, per-request PRN stream id (spiking decode)
+    active  — [slots] bool, slot occupancy
+    """
+
+    cache: Any
+    tokens: Array
+    seeds: Array
+    active: Array
+
+
+jax.tree_util.register_pytree_node(
+    DecodeState,
+    lambda s: ((s.cache, s.tokens, s.seeds, s.active), None),
+    lambda _, c: DecodeState(*c),
+)
+
+
+def init_state(cfg, slots: int, cache_len: int) -> DecodeState:
+    """A fresh, empty continuous batch of ``slots`` slots."""
+    return DecodeState(
+        cache=T.init_cache(cfg, slots, cache_len),
+        tokens=jnp.zeros((slots,), jnp.int32),
+        seeds=jnp.zeros((slots,), jnp.uint32),
+        active=jnp.zeros((slots,), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Slot-level cache surgery
+# ---------------------------------------------------------------------------
+
+
+def _map_cache(cache, f_periods, f_remainder, *rest):
+    out = {}
+    if "periods" in cache:
+        out["periods"] = jax.tree.map(
+            f_periods, cache["periods"], *[r["periods"] for r in rest])
+    if "remainder" in cache:
+        out["remainder"] = jax.tree.map(
+            f_remainder, cache["remainder"], *[r["remainder"] for r in rest])
+    return out
+
+
+def slot_slice(cache, slot) -> Any:
+    """A batch-1 view of one slot's cache."""
+    return _map_cache(
+        cache,
+        lambda a: lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+        lambda a: lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
+    )
+
+
+def slot_splice(cache, one, slot) -> Any:
+    """Write a batch-1 cache into slot ``slot`` of the batched cache."""
+    return _map_cache(
+        cache,
+        lambda a, o: lax.dynamic_update_slice_in_dim(a, o.astype(a.dtype), slot, axis=1),
+        lambda a, o: lax.dynamic_update_slice_in_dim(a, o.astype(a.dtype), slot, axis=0),
+        one,
+    )
+
+
+def slot_zero(cache, slot) -> Any:
+    """Zero one slot's cache leaves (state release: pos=0, spike trains=0)."""
+    return _map_cache(
+        cache,
+        lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
+        lambda a: a.at[slot].set(jnp.zeros((), a.dtype)),
+    )
+
+
+def splice_request(state: DecodeState, slot, cache1, token, seed) -> DecodeState:
+    """Admit a prefilled request into ``slot`` (continuous-batching splice)."""
+    return DecodeState(
+        cache=slot_splice(state.cache, cache1, slot),
+        tokens=state.tokens.at[slot].set(token),
+        seeds=state.seeds.at[slot].set(seed),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def release_slot(state: DecodeState, slot) -> DecodeState:
+    """Evict: zero the slot's cache and mark it free."""
+    return DecodeState(
+        cache=slot_zero(state.cache, slot),
+        tokens=state.tokens.at[slot].set(0),
+        seeds=state.seeds.at[slot].set(0),
+        active=state.active.at[slot].set(False),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Jitted step / prefill factories
+# ---------------------------------------------------------------------------
+
+
+def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
+    """The single jit-compiled batched decode step over the whole batch.
+
+    ``(params, state) -> (logits [slots,1,V], state')`` — every active slot
+    advances one token (greedy next-token written back into
+    ``state.tokens``).  Runs entirely through the engine backend's spiking
+    primitives for SSA configs; the conventional float path otherwise.
+    """
+
+    def step(params, state: DecodeState):
+        logits, cache = T.decode_step(
+            params, state.cache, state.tokens[:, None], cfg, pctx,
+            moe_impl=moe_impl, backend=backend, seeds=state.seeds,
+        )
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        return logits, dataclasses.replace(state, cache=cache, tokens=nxt)
+
+    return jax.jit(step)
+
+
+def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
+    """Batch-1 prompt prefill through the *same* decode path as serving.
+
+    ``(params, prompt [P], length, seed, cache1) -> cache1'`` — scans the
+    padded prompt through single-token decode, gating cache updates on
+    ``idx < length`` so one compiled scan serves every prompt in a padding
+    bucket.  Going through ``decode_step`` (not the training forward) keeps
+    prefill bit-identical to decoding the prompt token by token, which is
+    what makes batched serving exactly reproduce single-slot decoding.
+    """
+
+    def prefill(params, prompt, length, seed, cache1):
+        def body(c, xs):
+            tok, idx = xs
+            _, c2 = T.decode_step(
+                params, c, tok[None, None], cfg, pctx, moe_impl=moe_impl,
+                backend=backend, seeds=jnp.full((1,), seed, jnp.uint32),
+            )
+            keep = idx < length
+            c = jax.tree.map(lambda a, b: jnp.where(keep, b, a), c, c2)
+            return c, None
+
+        cache1, _ = lax.scan(body, cache1, (prompt, jnp.arange(prompt.shape[0])))
+        return cache1
+
+    return jax.jit(prefill)
+
+
+splice_request_jit = jax.jit(splice_request)
+release_slot_jit = jax.jit(release_slot)

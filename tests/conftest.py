@@ -1,4 +1,5 @@
 import itertools
+import os
 import sys
 import types
 
@@ -77,3 +78,19 @@ except ModuleNotFoundError:  # pragma: no cover - environment-dependent
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def engine_backend():
+    """The engine backend under test, selected by the XPIKE_BACKEND env var.
+
+    CI's backend-matrix job runs the engine/serving tests once per backend
+    (reference | integer | pallas); locally it defaults to "reference".
+    Tests that exercise *the selected* substrate (rather than comparing
+    substrates) should take this fixture instead of hard-coding a name.
+    """
+    name = os.environ.get("XPIKE_BACKEND", "reference")
+    from repro.engine import BACKENDS
+
+    assert name in BACKENDS, f"XPIKE_BACKEND={name!r} not in {sorted(BACKENDS)}"
+    return name

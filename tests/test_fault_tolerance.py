@@ -7,6 +7,7 @@ import pytest
 from repro.launch import train as LT
 
 
+@pytest.mark.slow
 def test_crash_restart_replays_exactly(tmp_path):
     """A run killed at step 12 and restarted must reach the same final loss
     as an uninterrupted run: checkpoints are exact and the data pipeline is
@@ -25,7 +26,13 @@ def test_crash_restart_replays_exactly(tmp_path):
     assert abs(losses_resumed[-1] - losses_ref[-1]) < 1e-4
 
 
+@pytest.mark.slow
 def test_training_reduces_loss(tmp_path):
-    losses = LT.run("mamba2-780m", steps=30, ckpt_dir=str(tmp_path / "c"),
-                    ckpt_every=0, log_every=0, seed=1)
-    assert losses[-1] < losses[0]
+    losses, probe0, probe1 = LT.run(
+        "mamba2-780m", steps=30, ckpt_dir=str(tmp_path / "c"),
+        ckpt_every=0, log_every=0, seed=1, probe=True,
+    )
+    # fixed-batch probe (see test_system): the mamba2 smoke init sits at the
+    # Markov stream's entropy floor, so fresh-batch first-vs-last deltas are
+    # noise; the fixed-batch gain after 30 steps is ~0.4 — deterministic.
+    assert probe1 < probe0 - 0.05

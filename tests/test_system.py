@@ -11,15 +11,23 @@ from repro.launch import serve as LS
 from repro.launch import train as LT
 
 
+@pytest.mark.slow
 def test_launcher_trains_and_checkpoints(tmp_path):
-    losses = LT.run("granite-3-8b", steps=25, ckpt_dir=str(tmp_path), ckpt_every=10,
-                    log_every=0, seed=2)
+    losses, probe0, probe1 = LT.run(
+        "granite-3-8b", steps=25, ckpt_dir=str(tmp_path), ckpt_every=10,
+        log_every=0, seed=2, probe=True,
+    )
     assert len(losses) == 25
-    assert losses[-1] < losses[0]
+    # fixed-batch probe: per-step losses are fresh batches, and the
+    # tied-embedding smoke starts calibrated at the stream's entropy floor,
+    # so first-vs-last fresh-batch loss is inter-batch noise (~+-0.05) while
+    # the trained model's gain on a held-fixed batch is ~0.3 — deterministic.
+    assert probe1 < probe0 - 0.05
     steps = {p.name for p in tmp_path.glob("step_*")}
     assert any(s.endswith("00000025") for s in steps)
 
 
+@pytest.mark.slow
 def test_launcher_moe_arch(tmp_path):
     losses = LT.run("phi3.5-moe-42b-a6.6b", steps=12, ckpt_dir=str(tmp_path),
                     ckpt_every=0, log_every=0)
