@@ -1,0 +1,118 @@
+"""Programmed-state forward throughput: tokens/sec per backend.
+
+    PYTHONPATH=src python benchmarks/aimc_forward.py --smoke
+    PYTHONPATH=src python benchmarks/aimc_forward.py --smoke --json out.json
+
+The cost of executing *programmed PCM state* (the AIMC device lifecycle,
+``repro/aimc_device.py``) vs plain float weights, on every engine backend:
+
+* ``float``      — on-the-fly 5-bit quantisation (integer/pallas) or ideal
+                   float matmuls (reference);
+* ``programmed`` — the device-state path: int8 drifted image x per-column
+                   folded scales on integer/pallas (the hot loop the
+                   ``drift_to``/``recalibrate`` fold keeps warm), the full
+                   analog crossbar simulation on reference.
+
+JSON output carries absolute tok/s and machine-robust *ratios*
+(programmed-vs-float relative throughput per backend); CI gates
+regressions on the ratios together with ``serving_throughput.py`` (see
+``benchmarks/check_regression.py``) — a change that makes programmed-state
+execution fall off the int8 hot path shows up as a collapsed ratio.
+
+``run(fast)`` rows integrate with ``benchmarks/run.py`` CSV output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs.xpikeformer import SPIKING_ARCHS
+from repro.data.icl_mimo import MIMOConfig, sample_batch as mimo_batch
+from repro.engine import XpikeformerEngine
+
+
+def _time_forward(eng, x, *, iters: int) -> float:
+    """Decoded-feature tokens per second through a jitted forward."""
+    jf = eng.jit_forward()
+    rng = jax.random.PRNGKey(1)
+    jf(eng.params, x, rng).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for i in range(iters):
+        jf(eng.params, x, jax.random.fold_in(rng, i)).block_until_ready()
+    dt = time.perf_counter() - t0
+    tokens = x.shape[0] * x.shape[1] * iters
+    return tokens / max(dt, 1e-9)
+
+
+def bench(smoke: bool = True, *, batch: int = 8, iters: int = 5,
+          backends=("reference", "integer", "pallas")):
+    """Returns the result dict written to --json."""
+    arch = "xpikeformer-gpt-smoke" if smoke else "xpikeformer-gpt-4-256"
+    task, cfg = SPIKING_ARCHS[arch]
+    x = mimo_batch(jax.random.PRNGKey(0), MIMOConfig(), batch)["features"]
+
+    results = []
+    ratios = {}
+    for bk in backends:
+        eng = XpikeformerEngine.from_config(arch, backend=bk)
+        params = eng.init(jax.random.PRNGKey(0))
+        tps_float = _time_forward(eng, x, iters=iters)
+
+        eng_hw = XpikeformerEngine.from_config(arch, backend=bk)
+        eng_hw.params = params
+        eng_hw.program(jax.random.PRNGKey(42))
+        tps_prog = _time_forward(eng_hw, x, iters=iters)
+
+        results += [
+            {"name": f"aimc/{arch}[{bk},float]", "arch": arch, "backend": bk,
+             "state": "float", "tokens_per_sec": tps_float},
+            {"name": f"aimc/{arch}[{bk},programmed]", "arch": arch,
+             "backend": bk, "state": "programmed", "tokens_per_sec": tps_prog},
+        ]
+        ratios[f"programmed_vs_float_{bk}_{arch}"] = tps_prog / max(tps_float, 1e-9)
+
+    return {
+        "meta": {"smoke": smoke, "batch": batch, "iters": iters,
+                 "device": jax.devices()[0].platform},
+        "results": results,
+        "ratios": ratios,
+    }
+
+
+def run(fast: bool = True):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    out = bench(smoke=fast)
+    rows = []
+    for r in out["results"]:
+        rows.append((r["name"], 1e6 / max(r["tokens_per_sec"], 1e-9),
+                     f"{r['tokens_per_sec']:.1f} tok/s {r['state']}"))
+    for k, v in out["ratios"].items():
+        rows.append((f"aimc/ratio/{k}", 0.0, f"{v:.2f}x"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=False,
+                    help="reduced arch (CPU CI)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    a = ap.parse_args(argv)
+    out = bench(smoke=a.smoke, batch=a.batch, iters=a.iters)
+    for r in out["results"]:
+        print(f"{r['name']:52s} {r['tokens_per_sec']:10.1f} tok/s")
+    for k, v in out["ratios"].items():
+        print(f"{'ratio/' + k:52s} {v:10.2f} x")
+    if a.json:
+        with open(a.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[aimc_forward] wrote {a.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,13 @@
 
     python benchmarks/check_regression.py current.json \
         --baseline benchmarks/baseline.json --tolerance 0.30
+    python benchmarks/check_regression.py serving.json aimc.json \
+        --baseline benchmarks/baseline.json
 
-Compares a fresh ``serving_throughput.py --json`` run against the
-checked-in baseline and exits non-zero if any gated metric regressed by
-more than ``--tolerance`` (default 30%).
+Compares fresh ``--json`` runs (``serving_throughput.py`` and
+``aimc_forward.py``; multiple files are merged — their ratio keys are
+disjoint) against the checked-in baseline and exits non-zero if any gated
+metric regressed by more than ``--tolerance`` (default 30%).
 
 Gated by default: the ``ratios`` block only — batched-vs-sequential
 speedup and backend-vs-reference relative throughput.  Ratios are
@@ -53,16 +56,29 @@ def check(current: dict, baseline: dict, tolerance: float, absolute: bool):
     return failures, report
 
 
+def merge(runs):
+    """Merge several benchmark JSONs (disjoint ratio keys, concat results)."""
+    out = {"results": [], "ratios": {}}
+    for run in runs:
+        out["results"].extend(run.get("results", []))
+        out["ratios"].update(run.get("ratios", {}))
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("current", help="fresh serving_throughput --json output")
+    ap.add_argument("current", nargs="+",
+                    help="fresh benchmark --json outputs (merged)")
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--tolerance", type=float, default=0.30)
     ap.add_argument("--absolute", action="store_true",
                     help="also gate absolute tok/s (pinned hardware only)")
     a = ap.parse_args(argv)
-    with open(a.current) as f:
-        current = json.load(f)
+    runs = []
+    for path in a.current:
+        with open(path) as f:
+            runs.append(json.load(f))
+    current = merge(runs)
     with open(a.baseline) as f:
         baseline = json.load(f)
     failures, report = check(current, baseline, a.tolerance, a.absolute)

@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.table6_sota",
     "benchmarks.kernels_micro",
     "benchmarks.backend_forward",
+    "benchmarks.aimc_forward",
     "benchmarks.serving_throughput",
     "benchmarks.roofline",
     "benchmarks.table4_icl_ber",

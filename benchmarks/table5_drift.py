@@ -13,6 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import aimc_device as AD
 from repro.core.aimc import AIMCConfig
 from repro.core.spiking_transformer import (AIMCSim, SpikingConfig, init_vit,
                                             program_model, vit_forward)
@@ -41,11 +42,17 @@ def run(fast: bool = True):
         params, _ = two_stage_train(params, fwd, data, ct_steps=steps,
                                     hwat_steps=hwat_steps, lr=3e-3, aimc_cfg=acfg)
         hw = program_model(jax.random.PRNGKey(42), params, acfg)
+        sim = AIMCSim(wmode="hw", cfg=acfg)
         for gdc in (False, True):
             accs = {}
             for name, t in TIMES.items():
-                sim = AIMCSim(wmode="hw", cfg=acfg, t_seconds=t, gdc=gdc)
-                logits = vit_forward(hw, test["images"], vcfg, sim, jax.random.PRNGKey(5))
+                # device lifecycle: drift the programmed state to t;
+                # GDC rows recalibrate at t (ideal periodic compensation)
+                drifted = AD.drift_tree(hw, t, acfg)
+                if gdc:
+                    drifted = AD.recalibrate_tree(drifted, acfg)
+                logits = vit_forward(drifted, test["images"], vcfg, sim,
+                                     jax.random.PRNGKey(5))
                 accs[name] = float(jnp.mean(jnp.argmax(logits, -1) == test["labels"]))
             dt = (time.perf_counter() - t0) * 1e6
             label = f"table5/{strat}+{'GDC' if gdc else 'NC'}"

@@ -64,9 +64,12 @@ def main():
                           ("1 year, GDC", 3.15e7, True)):
         backend = args.backend if t == 0.0 else "reference"
         eng = XpikeformerEngine.from_config(gcfg, task="gpt", backend=backend,
-                                            wmode="hw", aimc_cfg=acfg,
-                                            t_seconds=t, gdc=gdc)
+                                            wmode="hw", aimc_cfg=acfg)
         eng.params = hw
+        if t > 0:  # device lifecycle: age the PCM state, optionally GDC
+            eng.drift_to(t)
+            if gdc:
+                eng.recalibrate()
         logits = eng.forward(test["features"], jax.random.PRNGKey(5))
         b = float(ber(logits, test["labels"], test["mask"], mcfg))
         print(f"  BER [{label:16s}, {backend}] = {b:.4f}")

@@ -1,0 +1,461 @@
+"""First-class AIMC device state: the programmed-PCM lifecycle as a pytree.
+
+Before this module, "programmed hardware" was a loose ``{"hw": {...}}``
+dict convention that only the reference backend's dense ``jnp`` simulation
+understood — the integer and pallas backends silently fell back to ideal
+quantised weights, and nothing in the system modelled *when* the inference
+happens.  :class:`AIMCDeviceState` makes the device a first-class citizen:
+
+* **program** — quantise float weights to 5-bit differential-pair levels
+  (Table II), freeze per-device programming error and drift exponents, set
+  the device clock to t = 0;
+* **drift_to** — advance the device clock: conductances decay as
+  ``G(t) = G0 * (t / t0) ** -nu`` (Joshi et al. 2020) and the *digital
+  execution image* (``levels_t`` — the drifted conductances as the ADC
+  re-quantises them) is refreshed.  A pure pytree -> pytree update: shapes
+  and dtypes never change, so jitted consumers (the serving
+  ``decode_step``) are **not recompiled**;
+* **recalibrate** — global drift compensation (GDC, paper §V-B): read the
+  calibration column sums through the crossbar at the current t and fold
+  the measured gain into the per-column scales.  Between recalibrations
+  the gain is *stale* — that is exactly the accuracy-vs-time behaviour of
+  Fig. 7 / Table V, and what a long-running server periodically repairs.
+
+Execution semantics per backend (see ``repro.engine``):
+
+* ``reference`` — full analog simulation (:func:`analog_matmul`): per-device
+  drift, read noise, shared-ADC quantisation, stale GDC gain;
+* ``integer`` / ``pallas`` — the digital datapath: an int8 MXU matmul over
+  ``levels_t`` times the per-column f32 :attr:`AIMCDeviceState.eff_scale`.
+  Drift + GDC are folded into those two operands at ``drift_to`` /
+  ``recalibrate`` time, so the hot loop stays a plain int8 matmul and the
+  two backends remain bit-identical.
+
+This module is also the single source of truth for Table-II weight
+quantisation (:func:`quantize_weights`) — the engine backends, HWAT and
+programming all share it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aimc as AM
+from repro.core.aimc import AIMCConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Table-II quantisation (single source of truth)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(w: Array, cfg: AIMCConfig) -> Tuple[Array, Array]:
+    """Float weights ``[..., d_in, d_out]`` -> (integer levels, column scale).
+
+    The one entry point for Table-II weight quantisation, shared by the
+    engine backends' on-the-fly path, HWAT's noisy forward and PCM
+    programming — a thin composition of the rank-generic core helpers
+    (per-column max-abs maps to ``cfg.levels``; every leading axis, e.g. a
+    stacked layer-period axis, quantises independently)."""
+    scale = AM.column_scale(w, cfg).astype(jnp.float32)
+    return AM.quantize_levels(w, scale, cfg), scale
+
+
+def _drift_factor(nu: Array, t_seconds: Array, cfg: AIMCConfig) -> Array:
+    """``(max(t, t0) / t0) ** -nu``, written as exp/log so the Pallas
+    requantise kernel and the jnp oracle evaluate the identical op sequence
+    (bit-exactness of the fold is part of the kernel contract)."""
+    t = jnp.maximum(jnp.asarray(t_seconds, jnp.float32), cfg.drift_t0_s)
+    return jnp.exp(-nu * jnp.log(t / cfg.drift_t0_s))
+
+
+def image_gain(cfg: AIMCConfig) -> int:
+    """Integer gain of the digital execution image.
+
+    The *programming* grid is 5-bit (±``cfg.levels``), but the int8 MXU
+    operand has head-room to spare — re-digitising the drifted
+    conductances at the finest integer gain that cannot saturate (levels
+    plus 4 sigma of programming error) keeps the fold's rounding error
+    ~``image_gain``x smaller than re-using the programming grid, which is
+    what lets GDC recover most of the drift-induced error."""
+    return max(int(127.0 // (cfg.levels * (1.0 + 4.0 * cfg.prog_noise_sigma))), 1)
+
+
+# ---------------------------------------------------------------------------
+# The device state pytree
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AIMCDeviceState:
+    """Programmed PCM crossbar state for one weight matrix ``[..., d_in, d_out]``.
+
+    Immutable programming record (set once by :func:`program`):
+
+    levels    — ideal integer conductance-pair levels (f32-held ints)
+    eps       — programming error in level units, frozen at program time
+    nu        — per-device drift exponents
+    scale     — per-column float scale ``[..., d_out]``
+
+    Mutable lifecycle leaves (updated by :func:`drift_to` / :func:`recalibrate`;
+    same shapes/dtypes forever, so updates never trigger recompilation):
+
+    t_seconds — device clock ``[...]`` (seconds since programming)
+    gdc_gain  — global drift-compensation gain ``[...]`` measured at the
+                last recalibration (1.0 at program time; *stale* until the
+                next recalibration)
+    levels_t  — int8 drifted-and-requantised levels on the *image grid*
+                (programming grid x :func:`image_gain`): the digital
+                execution image of the analog array at ``t_seconds``,
+                consumed directly by the int8 MXU matmul
+    img_inv   — ``1 / image_gain`` ``[...]``, folded into
+                :attr:`eff_scale` so the image grid is transparent to
+                consumers
+
+    Leading axes are free: a layer-scanned stack programs as one state whose
+    leaves all carry the stack axis, so ``lax.scan`` slices it like any
+    other parameter leaf.
+    """
+
+    levels: Array
+    eps: Array
+    nu: Array
+    scale: Array
+    t_seconds: Array
+    gdc_gain: Array
+    levels_t: Array
+    img_inv: Array
+
+    @property
+    def eff_scale(self) -> Array:
+        """Per-column f32 scale with the GDC gain and the image-grid gain
+        folded in — the second operand of the digital programmed-state
+        matmul."""
+        return (self.scale * (self.gdc_gain * self.img_inv)[..., None]
+                ).astype(jnp.float32)
+
+    @property
+    def analog_scale(self) -> Array:
+        """Per-column scale for the *analog* path (programming-grid level
+        units): programmed scale x stale GDC gain, no image-grid factor."""
+        return (self.scale * self.gdc_gain[..., None]).astype(jnp.float32)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.levels.shape
+
+
+jax.tree_util.register_pytree_node(
+    AIMCDeviceState,
+    lambda s: ((s.levels, s.eps, s.nu, s.scale, s.t_seconds, s.gdc_gain,
+                s.levels_t, s.img_inv), None),
+    lambda _, c: AIMCDeviceState(*c),
+)
+
+
+def _requantize(levels: Array, eps: Array, nu: Array, t_seconds: Array,
+                cfg: AIMCConfig, img_gain) -> Array:
+    """Drifted conductances re-digitised onto the int8 image grid.
+
+    ``round((levels + eps) * drift * img_gain)`` is what a calibration
+    read through the shared ADC digitises the drifted array to — the
+    digital execution image at time t, at the full int8 resolution.
+    ``img_gain`` is the grid chosen at *program* time (scalar, or a
+    per-matrix array broadcastable over the trailing two axes): the image
+    grid is a physical property of the programmed array, never re-derived
+    from a caller's cfg."""
+    g = (levels + eps) * _drift_factor(nu, t_seconds[..., None, None], cfg)
+    g = g * img_gain
+    return jnp.clip(jnp.round(g), -127, 127).astype(jnp.int8)
+
+
+def program(key: Array, w: Array, cfg: AIMCConfig) -> AIMCDeviceState:
+    """Program float weights ``[..., d_in, d_out]`` onto simulated PCM.
+
+    Quantises (Table II), samples the frozen programming error and
+    per-device drift exponents, and sets the device clock to t = 0 with a
+    unit GDC gain."""
+    k1, k2 = jax.random.split(key)
+    levels, scale = quantize_weights(w, cfg)
+    levels = levels.astype(jnp.float32)
+    eps = cfg.prog_noise_sigma * cfg.levels * jax.random.normal(
+        k1, w.shape, jnp.float32)
+    nu = cfg.drift_nu_mean + cfg.drift_nu_sigma * jax.random.normal(
+        k2, w.shape, jnp.float32)
+    nu = jnp.maximum(nu, 0.0)
+    lead = w.shape[:-2]
+    t0 = jnp.zeros(lead, jnp.float32)
+    gain = jnp.ones(lead, jnp.float32)
+    return AIMCDeviceState(
+        levels=levels, eps=eps, nu=nu, scale=scale, t_seconds=t0,
+        gdc_gain=gain,
+        levels_t=_requantize(levels, eps, nu, t0, cfg,
+                             float(image_gain(cfg))),
+        img_inv=jnp.full(lead, 1.0 / image_gain(cfg), jnp.float32),
+    )
+
+
+def drift_to(state: AIMCDeviceState, t_seconds, cfg: AIMCConfig,
+             ) -> AIMCDeviceState:
+    """Advance the device clock to ``t_seconds`` (absolute, since program).
+
+    Refreshes the digital execution image ``levels_t``; does **not** touch
+    the GDC gain — compensation only moves at :func:`recalibrate`.  Pure
+    pytree -> pytree with unchanged shapes/dtypes (no recompilation)."""
+    t = jnp.broadcast_to(jnp.asarray(t_seconds, jnp.float32),
+                         state.t_seconds.shape)
+    # the image grid is frozen at program time: recover it from the state
+    # (round repairs fp32 reciprocal error, e.g. 1/7), never from `cfg` —
+    # a drift policy built with a different AIMCConfig must not re-image
+    # the array on a different grid
+    img_gain = jnp.round(1.0 / state.img_inv)[..., None, None]
+    return dataclasses.replace(
+        state, t_seconds=t,
+        levels_t=_requantize(state.levels, state.eps, state.nu, t, cfg,
+                             img_gain),
+    )
+
+
+def recalibrate(state: AIMCDeviceState, cfg: AIMCConfig) -> AIMCDeviceState:
+    """Global drift compensation (paper §V-B) at the current device time.
+
+    Hardware reads the summed absolute conductance with a calibration input
+    at t and rescales by ``sum |G(t_program)| / sum |G(t)|`` — one scalar
+    per crossbar ('global', not per-device).  The measured gain is folded
+    into :attr:`AIMCDeviceState.eff_scale` until the next recalibration."""
+    g0 = jnp.sum(jnp.abs(state.levels + state.eps), axis=(-2, -1))
+    df = _drift_factor(state.nu, state.t_seconds[..., None, None], cfg)
+    gt = jnp.sum(jnp.abs((state.levels + state.eps) * df), axis=(-2, -1))
+    return dataclasses.replace(state, gdc_gain=g0 / jnp.maximum(gt, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# Analog execution (reference backend)
+# ---------------------------------------------------------------------------
+
+
+def analog_matmul(key: Optional[Array], x: Array, state: AIMCDeviceState,
+                  cfg: AIMCConfig) -> Array:
+    """``x [..., d_in] @ W`` through the full analog crossbar simulation.
+
+    Row-block-wise mapping with shared-ADC quantisation and optional read
+    noise (``key``), per-device drift at the state's ``t_seconds``, and the
+    *stored* (possibly stale) GDC gain — the lifecycle-aware counterpart of
+    ``core.aimc.aimc_matmul``.  2-D states only (the per-matrix view that
+    model layers hand to the backends)."""
+    assert state.levels.ndim == 2, "analog_matmul executes one crossbar array"
+    d_in, d_out = state.levels.shape
+    df = _drift_factor(state.nu, state.t_seconds, cfg)
+    g = (state.levels + state.eps) * df  # level units, drifted
+    rows = cfg.crossbar_rows
+    pad = (-d_in) % rows
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        g = jnp.pad(g, [(0, pad), (0, 0)])
+    nb = g.shape[0] // rows
+    xb = x.reshape(*x.shape[:-1], nb, rows)
+    gb = g.reshape(nb, rows, d_out)
+    partial = jnp.einsum("...br,brd->...bd", xb.astype(jnp.float32), gb)
+    if key is not None and cfg.read_noise_sigma > 0:
+        partial = partial + cfg.read_noise_sigma * cfg.levels * jax.random.normal(
+            key, partial.shape, jnp.float32)
+    partial = AM._adc(partial, cfg)
+    out = jnp.sum(partial, axis=-2)  # exact digital accumulation (CSA)
+    return out * state.analog_scale
+
+
+# ---------------------------------------------------------------------------
+# Tree-level lifecycle (whole-model params)
+# ---------------------------------------------------------------------------
+
+
+def _is_state(x: Any) -> bool:
+    return isinstance(x, AIMCDeviceState)
+
+
+def is_programmed(tree: Any) -> bool:
+    """True if any leaf of ``tree`` is an :class:`AIMCDeviceState` (or a
+    legacy ``{"hw": {...}}`` programmed dict)."""
+    found = False
+
+    def visit(x):
+        nonlocal found
+        if _is_state(x):
+            found = True
+            return True
+        if isinstance(x, dict) and "hw" in x:
+            found = True
+            return True
+        return False
+
+    jax.tree.flatten(tree, is_leaf=visit)
+    return found
+
+
+def has_device_state(tree: Any) -> bool:
+    """True if any leaf is an :class:`AIMCDeviceState` proper.
+
+    Stricter than :func:`is_programmed`: legacy ``{"hw": {...}}`` dicts
+    count as programmed (they must not be re-programmed) but carry no
+    device clock — the drift/recalibration lifecycle cannot act on them."""
+    found = False
+
+    def visit(x):
+        nonlocal found
+        if _is_state(x):
+            found = True
+            return True
+        return False
+
+    jax.tree.flatten(tree, is_leaf=visit)
+    return found
+
+
+def program_tree(key: Array, params: Any, cfg: AIMCConfig) -> Any:
+    """Replace every ``{"w", "b"}`` linear leaf by its programmed state.
+
+    The paper-model (ViT/GPT) programming path; raises if the tree already
+    holds programmed state — programming is a one-shot physical act, and
+    double-programming used to silently re-wrap leaves."""
+    if is_programmed(params):
+        raise ValueError(
+            "params are already programmed onto PCM (AIMCDeviceState leaves "
+            "present); program once, then use drift_to()/recalibrate() for "
+            "the device lifecycle"
+        )
+
+    def is_lin(x):
+        return isinstance(x, dict) and "w" in x and "b" in x
+
+    leaves, treedef = jax.tree.flatten(params, is_leaf=is_lin)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if is_lin(leaf):
+            out.append({"hw": program(k, leaf["w"], cfg), "b": leaf["b"]})
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _matrix_view(name: str, w: Array) -> Array:
+    """Collapse a structured linear weight to its ``[..., d_in, d_out]``
+    crossbar view (the LM stack stores attention weights per-head)."""
+    if name in ("wq", "wk", "wv"):  # [..., d, h, hd] -> [..., d, h*hd]
+        return w.reshape(*w.shape[:-2], w.shape[-2] * w.shape[-1])
+    if name == "wo" and w.ndim >= 3:  # [..., h, hd, d] -> [..., h*hd, d]
+        return w.reshape(*w.shape[:-3], w.shape[-3] * w.shape[-2], w.shape[-1])
+    return w
+
+
+def program_lm_tree(key: Array, params: Any, cfg: AIMCConfig) -> Any:
+    """Program the generic LM stack's spiking-linear weights onto PCM.
+
+    Walks the ``periods`` / ``remainder`` block subtrees and replaces the
+    weights the spiking path executes through ``backend.spiking_linear`` —
+    attention ``wq/wk/wv/wo`` and MLP ``wi/wo`` — by
+    :class:`AIMCDeviceState` (stacked period leaves keep their leading layer
+    axis, so ``lax.scan`` slices them like any array leaf).  Norms, embed /
+    unembed and MoE routing stay digital, matching the paper's split (AIMC
+    for feed-forward and fully-connected layers only)."""
+    if is_programmed(params):
+        raise ValueError(
+            "params are already programmed onto PCM; program once, then use "
+            "drift_to()/recalibrate()"
+        )
+    params = dict(params)
+    _n = [0]
+
+    def next_key():
+        k = jax.random.fold_in(key, _n[0])
+        _n[0] += 1
+        return k
+
+    def prog_block(blk):
+        blk = dict(blk)
+        mix = blk.get("mixer")
+        if isinstance(mix, dict) and {"wq", "wk", "wv", "wo"} <= set(mix):
+            mix = dict(mix)
+            for name in ("wq", "wk", "wv", "wo"):
+                mix[name] = program(
+                    next_key(), _matrix_view(name, mix[name]).astype(jnp.float32),
+                    cfg)
+            blk["mixer"] = mix
+        mlp = blk.get("mlp")
+        if isinstance(mlp, dict) and {"wi", "wo"} <= set(mlp):
+            mlp = dict(mlp)
+            for name in ("wi", "wo"):
+                mlp[name] = program(next_key(), mlp[name].astype(jnp.float32), cfg)
+            blk["mlp"] = mlp
+        return blk
+
+    for group in ("periods", "remainder"):
+        if group in params:
+            params[group] = {
+                bk: prog_block(bv) for bk, bv in params[group].items()
+            }
+    return params
+
+
+def _map_states(fn, tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: fn(x) if _is_state(x) else x, tree, is_leaf=_is_state)
+
+
+def drift_tree(params: Any, t_seconds, cfg: AIMCConfig) -> Any:
+    """Advance every device state in a param tree to ``t_seconds``."""
+    return _map_states(lambda s: drift_to(s, t_seconds, cfg), params)
+
+
+def recalibrate_tree(params: Any, cfg: AIMCConfig) -> Any:
+    """GDC-recalibrate every device state in a param tree (at its own t)."""
+    return _map_states(lambda s: recalibrate(s, cfg), params)
+
+
+def device_time(params: Any) -> float:
+    """Max device-clock value across a tree (0.0 if nothing is programmed)."""
+    ts = [
+        float(jnp.max(leaf.t_seconds))
+        for leaf in jax.tree.leaves(params, is_leaf=_is_state) if _is_state(leaf)
+    ]
+    return max(ts) if ts else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Serving drift policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftPolicy:
+    """How a long-running server advances PCM device time (drift lifecycle).
+
+    seconds_per_step — fixed device-time advance per batched decode step;
+                       0.0 means "use wall clock" (each decode step adds its
+                       measured wall duration x ``time_scale``).  Fixed
+                       steps make soak tests and replays deterministic.
+    time_scale       — device seconds per wall-clock second (accelerated
+                       aging for studies; 1.0 = real time).
+    recal_interval_s — run GDC recalibration whenever this much device time
+                       has passed since the last one; 0.0 disables
+                       periodic recalibration (drift accumulates forever —
+                       the paper's "without GDC" rows).
+    cfg              — the AIMC configuration (Table II) for the updates.
+    """
+
+    seconds_per_step: float = 0.0
+    time_scale: float = 1.0
+    recal_interval_s: float = 0.0
+    cfg: AIMCConfig = dataclasses.field(default_factory=AIMCConfig)
+
+
+# jitted tree updates for the serving hot loop: t is traced, so advancing
+# the clock re-uses one compiled update per param treedef (no recompiles)
+drift_tree_jit = jax.jit(drift_tree, static_argnames=("cfg",))
+recalibrate_tree_jit = jax.jit(recalibrate_tree, static_argnames=("cfg",))

@@ -64,14 +64,17 @@ class AIMCConfig:
 
 
 def column_scale(w: Array, cfg: AIMCConfig) -> Array:
-    """Per-output-column scale: g_max maps to max |w| in the column."""
-    amax = jnp.max(jnp.abs(w), axis=0)
+    """Per-output-column scale: g_max maps to max |w| in the column.
+
+    Rank-generic over ``[..., d_in, d_out]`` — leading axes (e.g. a
+    stacked layer-period axis) scale independently."""
+    amax = jnp.max(jnp.abs(w), axis=-2)
     return jnp.where(amax > 0, amax / cfg.levels, 1.0)
 
 
 def quantize_levels(w: Array, scale: Array, cfg: AIMCConfig) -> Array:
     """Signed integer conductance-pair levels in [-levels, levels]."""
-    return jnp.clip(jnp.round(w / scale), -cfg.levels, cfg.levels)
+    return jnp.clip(jnp.round(w / scale[..., None, :]), -cfg.levels, cfg.levels)
 
 
 @jax.custom_vjp

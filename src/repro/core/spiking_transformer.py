@@ -92,7 +92,16 @@ def _linear_def(key, d_in, d_out, scale=1.0):
 
 def linear(p, x: Array, sim: AIMCSim, key: Optional[Array]) -> Array:
     if "hw" in p:  # programmed PCM state (inference)
-        y = AM.aimc_matmul(key, x, p["hw"], sim.cfg, t_seconds=sim.t_seconds, gdc=sim.gdc)
+        from repro import aimc_device as AD
+
+        hw = p["hw"]
+        if isinstance(hw, AD.AIMCDeviceState):
+            # device-state lifecycle: drift at the state's own clock,
+            # stored (stale) GDC gain — see repro.aimc_device
+            y = AD.analog_matmul(key, x, hw, sim.cfg)
+        else:  # legacy dict state
+            y = AM.aimc_matmul(key, x, hw, sim.cfg, t_seconds=sim.t_seconds,
+                               gdc=sim.gdc)
         return y + p["b"]
     w = p["w"]
     if sim.wmode == "hwat":
@@ -102,20 +111,14 @@ def linear(p, x: Array, sim: AIMCSim, key: Optional[Array]) -> Array:
 
 
 def program_model(key: Array, params: Any, cfg: AM.AIMCConfig) -> Any:
-    """Replace every {"w","b"} linear leaf by its programmed PCM state."""
+    """Replace every {"w","b"} linear leaf by its programmed PCM state.
 
-    def is_lin(x):
-        return isinstance(x, dict) and "w" in x and "b" in x
+    Delegates to :func:`repro.aimc_device.program_tree` — each leaf becomes
+    ``{"hw": AIMCDeviceState, "b": b}`` with the device clock at t = 0.
+    Raises if the tree is already programmed (one-shot physical act)."""
+    from repro import aimc_device as AD
 
-    leaves, treedef = jax.tree.flatten(params, is_leaf=is_lin)
-    keys = jax.random.split(key, len(leaves))
-    out = []
-    for leaf, k in zip(leaves, keys):
-        if is_lin(leaf):
-            out.append({"hw": AM.program_weights(k, leaf["w"], cfg), "b": leaf["b"]})
-        else:
-            out.append(leaf)
-    return jax.tree.unflatten(treedef, out)
+    return AD.program_tree(key, params, cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,8 @@ from typing import Any, Dict, Optional, Protocol, Union, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro import aimc_device as AD
+from repro.aimc_device import AIMCDeviceState
 from repro.core import aimc as AM
 from repro.core import spikes as SP
 from repro.core import ssa as SSA
@@ -112,6 +114,8 @@ class Backend(Protocol):
 
 def _linear_parts(p: Any) -> Dict[str, Any]:
     """Normalise a linear param leaf to ``{"w"|"hw", "b"}`` form."""
+    if isinstance(p, AIMCDeviceState):
+        return {"hw": p, "b": None}
     if isinstance(p, dict):
         return p
     return {"w": p, "b": None}
@@ -120,19 +124,24 @@ def _linear_parts(p: Any) -> Dict[str, Any]:
 def _levels_scale(p: Dict[str, Any], sim: AIMCSim):
     """Integer conductance levels + per-column scale for a linear leaf.
 
-    Programmed PCM state carries its levels/scale; float weights are
-    quantised on the fly with the sim's AIMC config.  The *analog*
-    programming error / drift in the hw state are deliberately not applied
-    here: the integer and pallas backends model the digital datapath of the
-    SSA engine (quantised levels, exact popcount/CSA accumulation) — analog
-    non-idealities belong to the reference backend's AIMC simulation.
+    Programmed PCM state (:class:`repro.aimc_device.AIMCDeviceState`)
+    executes its *digital image* — the drifted, GDC-compensated int8
+    ``levels_t`` and per-column ``eff_scale`` that ``drift_to`` /
+    ``recalibrate`` folded at calibration time, so the hot loop stays an
+    int8 MXU matmul on every backend.  Float weights are quantised on the
+    fly via the single source of truth
+    (:func:`repro.aimc_device.quantize_weights`); legacy ``{"hw": {...}}``
+    dicts keep their ideal-levels behaviour.  Continuous analog
+    non-idealities (read noise, per-device drift residuals, shared-ADC
+    clipping) remain reference-backend-only.
     """
     if "hw" in p:
-        return p["hw"]["levels"].astype(jnp.int8), p["hw"]["scale"]
-    w = p["w"]
-    scale = AM.column_scale(w, sim.cfg)
-    levels = AM.quantize_levels(w, scale, sim.cfg).astype(jnp.int8)
-    return levels, scale
+        hw = p["hw"]
+        if isinstance(hw, AIMCDeviceState):
+            return hw.levels_t, hw.eff_scale
+        return hw["levels"].astype(jnp.int8), hw["scale"]
+    levels, scale = AD.quantize_weights(p["w"], sim.cfg)
+    return levels.astype(jnp.int8), scale
 
 
 def _flatten_time(spikes: Array):
@@ -190,7 +199,13 @@ class ReferenceBackend:
     def spiking_linear(self, key, p, spikes, sim=None):
         sim = sim or _IDEAL_SIM
         p = _linear_parts(p)
-        if "hw" in p:  # programmed PCM state: full analog crossbar sim
+        if isinstance(p.get("hw"), AIMCDeviceState):
+            # device-state lifecycle: per-device drift at the state's own
+            # t_seconds, read noise, shared ADC, *stored* (stale) GDC gain
+            pre = jax.vmap(
+                lambda zt: AD.analog_matmul(key, zt, p["hw"], sim.cfg)
+            )(spikes)
+        elif "hw" in p:  # legacy dict state: full analog crossbar sim
             pre = jax.vmap(
                 lambda zt: AM.aimc_matmul(
                     key, zt, p["hw"], sim.cfg, t_seconds=sim.t_seconds, gdc=sim.gdc
@@ -313,6 +328,90 @@ class PallasBackend:
             interpret=self.interpret,
         )
         return unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Metering backend — spike counts x Table-II op energies (eager only)
+# ---------------------------------------------------------------------------
+
+
+class MeteringBackend:
+    """Wraps any backend and meters energy from **measured** spike counts.
+
+    Every primitive call records its operand/output spike events and
+    converts them to picojoules with the Table-II op energies
+    (``repro.energy.model.meter_*``), accumulating into :attr:`report`.
+    Counting forces a host sync per call, so metering is for *eager*
+    forwards — ``engine.forward(..., metering=True)`` — not for jitted
+    serving loops (those meter through the decode-step activity counters,
+    see ``repro.serving.scheduler``)."""
+
+    def __init__(self, inner: Backend):
+        from repro.energy import model as EM
+
+        self.inner = inner
+        self.report = EM.EnergyReport()
+        self.name = f"metered[{inner.name}]"
+        self.differentiable = inner.differentiable
+        self.bit_exact = inner.bit_exact
+
+    @staticmethod
+    def _count(x) -> float:
+        return float(jnp.sum(jnp.asarray(x, jnp.float32)))
+
+    def ssa_attention(self, key, q, k, v, *, causal=False):
+        from repro.energy import model as EM
+
+        out = self.inner.ssa_attention(key, q, k, v, causal=causal)
+        t, b, h, n, d = q.shape
+        qs, ks, vs = self._count(q), self._count(k), self._count(v)
+        e = EM.meter_ssa(t, b * h, n, n, d, qs / q.size, ks / k.size,
+                         vs / v.size)
+        self.report.ssa_pj += e["ssa"]
+        self.report.spikes_in += qs + ks + vs
+        self.report.spikes_out += self._count(out)
+        self.report.calls += 1
+        return out
+
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+        from repro.energy import model as EM
+
+        out = self.inner.ssa_attention_decode(slot_keys, q, k, v, i_max=i_max)
+        t, b, h, n, d = q.shape
+        l = k.shape[3]
+        qs, ks, vs = self._count(q), self._count(k), self._count(v)
+        e = EM.meter_ssa(t, b * h, n, l, d, qs / q.size, ks / k.size,
+                         vs / v.size)
+        self.report.ssa_pj += e["ssa"]
+        self.report.spikes_in += qs + ks + vs
+        self.report.spikes_out += self._count(out)
+        self.report.calls += 1
+        return out
+
+    def lif(self, currents, *, beta=0.5, v_thresh=1.0):
+        from repro.energy import constants as C
+
+        out = self.inner.lif(currents, beta=beta, v_thresh=v_thresh)
+        self.report.lif_pj += currents.size * C.E_LIF_STEP
+        self.report.spikes_out += self._count(out)
+        self.report.calls += 1
+        return out
+
+    def spiking_linear(self, key, p, spikes, sim=None):
+        from repro.energy import model as EM
+
+        out = self.inner.spiking_linear(key, p, spikes, sim)
+        t = spikes.shape[0]
+        d_in, d_out = spikes.shape[-1], out.shape[-1]
+        tokens = int(spikes.size // (t * d_in))
+        ins = self._count(spikes)
+        e = EM.meter_spiking_linear(t, tokens, d_in, d_out, ins)
+        self.report.aimc_pj += e["aimc"]
+        self.report.lif_pj += e["lif"]
+        self.report.spikes_in += ins
+        self.report.spikes_out += self._count(out)
+        self.report.calls += 1
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -443,30 +542,90 @@ class XpikeformerEngine:
     def program(self, key: Array, params: Any = None):
         """Program the float weights onto simulated PCM crossbars.
 
-        Replaces every linear leaf by its programmed hardware state and
-        switches the sim to long-term inference mode (wmode="hw")."""
+        Replaces every linear leaf by its programmed
+        :class:`~repro.aimc_device.AIMCDeviceState` and switches the sim to
+        long-term inference mode (wmode="hw").  Programming is a one-shot
+        physical act: calling it on an already-programmed tree raises
+        (``ValueError``) instead of silently re-wrapping leaves; the same
+        ``key`` always programs the same device state.  For ``task="lm"``
+        the generic LM stack's spiking-linear weights (attention q/k/v/o,
+        MLP in/out) are programmed and everything else stays digital."""
         params = self.params if params is None else params
         assert params is not None, "call init() first or pass params"
-        self.params = ST.program_model(key, params, self.sim.cfg)
+        if AD.is_programmed(params):
+            raise ValueError(
+                "engine.program(): params already hold programmed PCM state; "
+                "programming is one-shot — use drift_to()/recalibrate() to "
+                "advance the device lifecycle"
+            )
+        if self.task == "lm":
+            self.params = AD.program_lm_tree(key, params, self.sim.cfg)
+        else:
+            self.params = ST.program_model(key, params, self.sim.cfg)
         self.sim = dataclasses.replace(self.sim, wmode="hw")
+        if self.sim.t_seconds > 0:  # engine built with a nonzero device age
+            self.params = AD.drift_tree(self.params, self.sim.t_seconds,
+                                        self.sim.cfg)
+        return self.params
+
+    def drift_to(self, t_seconds: float, params: Any = None):
+        """Advance the programmed device clock to ``t_seconds``.
+
+        Pure leaf-value update (shapes/dtypes unchanged), so jitted
+        consumers of the params — ``jit_forward`` closures, the serving
+        ``decode_step`` — are not recompiled."""
+        params = self.params if params is None else params
+        self._require_device_state(params)
+        self.params = AD.drift_tree_jit(
+            params, jnp.float32(t_seconds), self.sim.cfg)
+        self.sim = dataclasses.replace(self.sim, t_seconds=float(t_seconds))
+        return self.params
+
+    @staticmethod
+    def _require_device_state(params) -> None:
+        if not AD.has_device_state(params):
+            raise ValueError(
+                "the drift lifecycle needs AIMCDeviceState leaves — call "
+                "engine.program() first (legacy {'hw': dict} trees carry no "
+                "device clock and cannot be aged or recalibrated)"
+            )
+
+    def recalibrate(self, params: Any = None):
+        """Run global drift compensation (GDC, §V-B) at the current device
+        time: fold the measured calibration gain into the per-column scales
+        of every programmed crossbar."""
+        params = self.params if params is None else params
+        self._require_device_state(params)
+        self.params = AD.recalibrate_tree_jit(params, self.sim.cfg)
         return self.params
 
     # -- forward -------------------------------------------------------
 
-    def forward(self, x: Array, rng: Array, params: Any = None) -> Array:
+    def forward(self, x: Array, rng: Array, params: Any = None, *,
+                metering: bool = False):
         """Full model forward: images -> class logits (vit), feature
         sequences -> per-token symbol logits (gpt), or token ids [B,S] ->
-        next-token logits (lm)."""
+        next-token logits (lm).
+
+        With ``metering=True`` the spiking primitives run through a
+        :class:`MeteringBackend` and the call returns ``(logits, report)``
+        where ``report`` is a :class:`repro.energy.model.EnergyReport` —
+        measured spike counts x Table-II op energies.  Metering syncs the
+        host per primitive call, so it is for eager forwards only."""
         params = self.params if params is None else params
         assert params is not None, "call init() first or pass params"
+        backend = MeteringBackend(self.backend) if metering else self.backend
         if self.task == "lm":
             from repro.models import transformer as T
 
             logits, _ = T.forward(params, {"tokens": x}, self.cfg, rng=rng,
-                                  backend=self.backend, remat="none")
-            return logits
-        fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
-        return fwd(params, x, self.cfg, self.sim, rng, backend=self.backend)
+                                  backend=backend, remat="none")
+        else:
+            fwd = ST.vit_forward if self.task == "vit" else ST.gpt_forward
+            logits = fwd(params, x, self.cfg, self.sim, rng, backend=backend)
+        if metering:
+            return logits, backend.report
+        return logits
 
     def jit_forward(self):
         """A jitted pure function ``(params, x, rng) -> logits`` over the
@@ -507,6 +666,7 @@ class XpikeformerEngine:
         params: Any = None,
         pctx: Any = None,
         moe_impl: Optional[str] = None,
+        drift: Any = None,
     ):
         """A :class:`repro.serving.BatchScheduler` over this engine.
 
@@ -525,11 +685,12 @@ class XpikeformerEngine:
         sch = self._schedulers.get(key) if pctx is None else None
         if sch is not None:
             sch.reset()
-            sch.params = params
+            sch.set_params(params)
+            sch.drift = drift
             return sch
         sch = BatchScheduler(
             params, self.cfg, self.backend, slots=slots, cache_len=cache_len,
-            pctx=pctx, moe_impl=moe_impl,
+            pctx=pctx, moe_impl=moe_impl, drift=drift,
         )
         if pctx is None:
             self._schedulers[key] = sch
@@ -546,15 +707,25 @@ class XpikeformerEngine:
         params: Any = None,
         pctx: Any = None,
         moe_impl: Optional[str] = None,
+        drift: Any = None,
     ):
         """Continuous-batching serve: prompts -> (outputs, ServeStats).
 
         Every request gets the PRN stream ``seed + i`` so results are
-        reproducible and independent of batching/admission order."""
+        reproducible and independent of batching/admission order.  Pass a
+        :class:`repro.aimc_device.DriftPolicy` as ``drift`` (with
+        programmed params) to run the PCM drift/recalibration lifecycle;
+        per-request energy lands in the scheduler's ``request_energy_j``
+        and the returned stats."""
         sch = self.scheduler(slots=slots, cache_len=cache_len, params=params,
-                             pctx=pctx, moe_impl=moe_impl)
+                             pctx=pctx, moe_impl=moe_impl, drift=drift)
         rids = [sch.submit(p, max_new, seed=seed + i) for i, p in enumerate(prompts)]
         outs = sch.run()
+        if params is None and sch._programmed:
+            # drift is physical: adopt the aged/recalibrated device state so
+            # a later serve() (which re-seeds the cached scheduler from
+            # self.params) cannot rejuvenate the PCM clock
+            self.params = sch.params
         return [outs[r] for r in rids], sch.stats
 
     def generate(self, prompts, max_new: int = 16, **kwargs):

@@ -59,6 +59,51 @@ def _kernel(s_ref, w_ref, scale_ref, bias_ref, out_ref, acc_ref, *, t_steps: int
             out_ref[t] = spike.astype(out_ref.dtype)
 
 
+def _requant_kernel(t_ref, lv_ref, eps_ref, nu_ref, out_ref, *, t0: float,
+                    img_gain: int):
+    """Drift-requantise one [block_in, block_out] crossbar tile.
+
+    The calibration-time fold of the programmed-state path: re-digitise the
+    drifted analog conductances ``(levels + eps) * (t/t0)^-nu`` onto the
+    full int8 image grid (``img_gain`` steps per programming level), so the
+    execution hot loop stays a plain int8 MXU matmul.  The op sequence
+    (maximum, exp/log power, gain, round, clip) matches
+    ``repro.aimc_device._requantize`` / ``kernels.ref.drift_requantize_ref``
+    exactly — bit-exactness of the fold is part of the kernel contract."""
+    t = jnp.maximum(t_ref[0], t0)
+    df = jnp.exp(-nu_ref[...] * jnp.log(t / t0))
+    g = (lv_ref[...] + eps_ref[...]) * df * float(img_gain)
+    out_ref[...] = jnp.clip(jnp.round(g), -127, 127).astype(jnp.int8)
+
+
+def drift_requantize_kernel(
+    levels: Array,  # [d_in, d_out] f32 programmed integer levels
+    eps: Array,  # [d_in, d_out] f32 programming error (level units)
+    nu: Array,  # [d_in, d_out] f32 per-device drift exponents
+    t_seconds: Array,  # [1] f32 device time (traced — no recompile on change)
+    *,
+    t0: float,
+    img_gain: int = 1,
+    block_in: int = 128,
+    block_out: int = 128,
+    interpret: bool = False,
+) -> Array:
+    d_in, d_out = levels.shape
+    block_in = min(block_in, d_in)
+    block_out = min(block_out, d_out)
+    assert d_in % block_in == 0 and d_out % block_out == 0
+    kern = functools.partial(_requant_kernel, t0=t0, img_gain=img_gain)
+    tile = pl.BlockSpec((block_in, block_out), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kern,
+        grid=(d_in // block_in, d_out // block_out),
+        in_specs=[pl.BlockSpec((1,), lambda i, j: (0,)), tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((d_in, d_out), jnp.int8),
+        interpret=interpret,
+    )(t_seconds, levels, eps, nu)
+
+
 def aimc_spiking_linear_kernel(
     spikes: Array,  # [T, B, d_in] binary (any float/int dtype)
     w_levels: Array,  # [d_in, d_out] int8 (5-bit conductance-pair levels)

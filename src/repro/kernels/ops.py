@@ -17,7 +17,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.aimc_matmul import aimc_spiking_linear_kernel
+from repro.kernels.aimc_matmul import (aimc_spiking_linear_kernel,
+                                       drift_requantize_kernel)
 from repro.kernels.lif import lif_kernel
 from repro.kernels.ssa_attention import ssa_attention_kernel, ssa_decode_kernel
 
@@ -214,3 +215,72 @@ def aimc_spiking_linear(
         block_b=min(bb, 128), block_in=128, block_out=128, interpret=interpret,
     )
     return out[:, :b, :d_out]
+
+
+@partial(jax.jit, static_argnames=("t0", "img_gain", "interpret"))
+def drift_requantize(
+    levels: Array,  # [d_in, d_out] f32 programmed integer levels
+    eps: Array,  # [d_in, d_out] f32 frozen programming error (level units)
+    nu: Array,  # [d_in, d_out] f32 per-device drift exponents
+    t_seconds: Array,  # scalar f32 device time (traced)
+    *,
+    t0: float,
+    img_gain: int = 1,
+    interpret: bool = True,
+) -> Array:
+    """Drifted-conductance requantisation on the Pallas path.
+
+    The calibration-time fold that keeps the programmed-state hot loop an
+    int8 MXU matmul: re-digitise ``(levels+eps) * (t/t0)^-nu * img_gain``
+    onto the full int8 image grid.  Zero-padded to 128x128 tile multiples and sliced
+    back; bit-exact vs :func:`repro.kernels.ref.drift_requantize_ref` (and
+    ``repro.aimc_device.drift_to``) for any shape."""
+    d_in, d_out = levels.shape
+
+    def rup(x, m):
+        return (x + m - 1) // m * m
+
+    di, do = rup(d_in, 128), rup(d_out, 128)
+    pad = ((0, di - d_in), (0, do - d_out))
+    out = drift_requantize_kernel(
+        jnp.pad(levels.astype(jnp.float32), pad),
+        jnp.pad(eps.astype(jnp.float32), pad),
+        jnp.pad(nu.astype(jnp.float32), pad),
+        jnp.reshape(t_seconds, (1,)).astype(jnp.float32),
+        t0=t0, img_gain=img_gain, interpret=interpret,
+    )
+    return out[:d_in, :d_out]
+
+
+@partial(jax.jit, static_argnames=("t0", "img_gain", "beta", "v_thresh",
+                                   "interpret"))
+def aimc_spiking_linear_programmed(
+    spikes: Array,  # [T, B, d_in]
+    levels: Array,  # [d_in, d_out] f32 programmed integer levels
+    eps: Array,  # [d_in, d_out] f32 frozen programming error
+    nu: Array,  # [d_in, d_out] f32 per-device drift exponents
+    scale: Array,  # [d_out] f32 programmed per-column scale
+    t_seconds: Array,  # scalar device time
+    gdc_gain: Array,  # scalar GDC gain (stale between recalibrations)
+    bias: Optional[Array] = None,
+    *,
+    t0: float,
+    img_gain: int = 1,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+    interpret: bool = True,
+) -> Array:
+    """End-to-end programmed-state spiking linear on the Pallas path.
+
+    Fold kernel (:func:`drift_requantize`) + int8 matmul/LIF kernel
+    (:func:`aimc_spiking_linear`); bit-exact vs
+    :func:`repro.kernels.ref.aimc_programmed_linear_ref` at fixed
+    ``t_seconds``.  Production serving keeps the folded ``levels_t`` /
+    ``eff_scale`` cached in :class:`repro.aimc_device.AIMCDeviceState` and
+    calls :func:`aimc_spiking_linear` directly; this wrapper is the
+    one-shot (fold-on-the-fly) variant used by tests and drift studies."""
+    levels_t = drift_requantize(levels, eps, nu, t_seconds, t0=t0,
+                                img_gain=img_gain, interpret=interpret)
+    eff_scale = (scale * gdc_gain / float(img_gain)).astype(jnp.float32)
+    return aimc_spiking_linear(spikes, levels_t, eff_scale, bias, beta=beta,
+                               v_thresh=v_thresh, interpret=interpret)

@@ -74,6 +74,49 @@ def lif_ref(currents: Array, *, beta: float = 0.5, v_thresh: float = 1.0) -> Arr
     return out
 
 
+def drift_requantize_ref(levels: Array, eps: Array, nu: Array, t_seconds,
+                         *, t0: float, img_gain: int = 1) -> Array:
+    """Digital execution image of a drifted PCM array (programmed-state fold).
+
+    ``clip(round((levels + eps) * (max(t, t0)/t0)^-nu * img_gain))`` — the
+    drifted analog conductances as the shared ADC re-digitises them onto
+    the full int8 image grid (``img_gain`` integer steps per programming
+    level).  The drift power is evaluated as exp/log so the Pallas
+    ``drift_requantize_kernel`` executes the identical op sequence."""
+    t = jnp.maximum(jnp.asarray(t_seconds, jnp.float32), t0)
+    df = jnp.exp(-nu * jnp.log(t / t0))
+    g = (levels + eps) * df * float(img_gain)
+    return jnp.clip(jnp.round(g), -127, 127).astype(jnp.int8)
+
+
+def aimc_programmed_linear_ref(
+    spikes: Array,  # [T, B, d_in] binary
+    levels: Array,  # [d_in, d_out] f32 programmed integer levels
+    eps: Array,  # [d_in, d_out] f32 frozen programming error
+    nu: Array,  # [d_in, d_out] f32 per-device drift exponents
+    scale: Array,  # [d_out] f32 programmed per-column scale
+    t_seconds,  # scalar device time
+    gdc_gain,  # scalar global drift-compensation gain (stale between recals)
+    bias: Array = None,
+    *,
+    t0: float,
+    img_gain: int = 1,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+) -> Array:
+    """Programmed-state spiking linear oracle: the digital-datapath
+    semantics every backend must reproduce at a fixed device time.
+
+    Drift + GDC fold into the two matmul operands — the int8 drifted image
+    and the per-column f32 ``scale * gdc_gain / img_gain`` — then the LIF
+    dynamics run exactly as in :func:`aimc_spiking_linear_ref`."""
+    levels_t = drift_requantize_ref(levels, eps, nu, t_seconds, t0=t0,
+                                    img_gain=img_gain)
+    eff_scale = (scale * gdc_gain / float(img_gain)).astype(jnp.float32)
+    return aimc_spiking_linear_ref(spikes, levels_t, eff_scale, bias,
+                                   beta=beta, v_thresh=v_thresh)
+
+
 def aimc_spiking_linear_ref(
     spikes: Array,  # [T, B, d_in] binary
     w_levels: Array,  # [d_in, d_out] int8

@@ -2,6 +2,8 @@
 
     python -m repro.launch.serve --arch yi-9b --requests 8
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --backend pallas
+    python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --program \\
+        --drift-step 60 --recal-every 3600      # PCM lifecycle + energy
 
 Thin CLI over the ``repro.serving`` subsystem: a :class:`~repro.serving.
 BatchScheduler` splices requests into free slots mid-flight (continuous
@@ -11,6 +13,13 @@ pytree, and advances every slot with one jit-compiled batched
 backend (reference / integer / pallas) over spike-train KV caches; all
 other archs use the conventional float KV / recurrent-state path.  Greedy
 sampling.
+
+``--program`` programs the spiking-linear weights onto simulated PCM
+(:mod:`repro.aimc_device`) before serving; ``--drift-step`` /
+``--recal-every`` set the device-seconds-per-decode-step and GDC
+recalibration interval of the drift lifecycle (0 = wall clock / never).
+Per-request energy (measured spike events x Table-II op energies) prints
+with the serve summary.
 """
 
 from __future__ import annotations
@@ -22,6 +31,7 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
+from repro import aimc_device as AD
 from repro.configs.base import ParallelConfig
 from repro.configs.registry import get_config, reduced_config
 from repro.engine import get_backend
@@ -41,6 +51,9 @@ def serve(
     cache_len: int = 64,
     seed: int = 0,
     backend: str = "reference",
+    program: bool = False,
+    drift_step_s: float = 0.0,
+    recal_every_s: float = 0.0,
 ):
     """Serve ``n_requests`` synthetic prompts; returns their outputs in
     submission order (continuous batching: a finished slot is refilled from
@@ -56,9 +69,21 @@ def serve(
     pctx = SH.make_pctx(mesh, parallel)
     params = T.init_params(jax.random.PRNGKey(seed), cfg)
 
+    drift = None
+    if program:
+        if not (cfg.spiking and cfg.attention_kind == "ssa"):
+            raise SystemExit(f"--program needs a spiking SSA arch, not {arch}")
+        params = AD.program_lm_tree(jax.random.PRNGKey(seed + 42), params,
+                                    AD.AIMCConfig())
+        drift = AD.DriftPolicy(seconds_per_step=drift_step_s,
+                               recal_interval_s=recal_every_s)
+        print(f"[serve] programmed spiking linears onto PCM "
+              f"(drift {drift_step_s or 'wall-clock'} s/step, "
+              f"GDC every {recal_every_s or 'never'} s)")
+
     sch = BatchScheduler(
         params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
-        pctx=pctx, moe_impl=parallel.moe_impl,
+        pctx=pctx, moe_impl=parallel.moe_impl, drift=drift,
     )
     rng = jax.random.PRNGKey(seed + 1)
     prompts: List[jnp.ndarray] = [
@@ -74,6 +99,16 @@ def serve(
     print(f"[serve] served {st.requests} requests, {st.decoded_tokens} tokens "
           f"in {dt:.2f}s ({st.decoded_tokens/max(dt,1e-9):.1f} tok/s, "
           f"{st.decode_steps} batched decode steps, {st.admissions} admissions)")
+    if st.energy_j > 0:
+        per_tok = st.energy_j / max(st.decoded_tokens, 1)
+        print(f"[serve] energy: {st.energy_j*1e6:.2f} uJ total "
+              f"({per_tok*1e9:.1f} nJ/token, {st.spike_events:.0f} spike events)")
+        worst = max(sch.request_energy_j.items(), key=lambda kv: kv[1])
+        print(f"[serve] per-request energy: max rid={worst[0]} "
+              f"{worst[1]*1e9:.1f} nJ")
+    if program:
+        print(f"[serve] device clock t={st.t_device_s:.1f}s, "
+              f"{st.recalibrations} GDC recalibrations")
     return [outs[r] for r in rids]
 
 
@@ -87,9 +122,17 @@ def main(argv=None):
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "integer", "pallas"])
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
+    ap.add_argument("--program", action="store_true", default=False,
+                    help="program spiking linears onto simulated PCM first")
+    ap.add_argument("--drift-step", type=float, default=0.0,
+                    help="device seconds per decode step (0 = wall clock)")
+    ap.add_argument("--recal-every", type=float, default=0.0,
+                    help="GDC recalibration interval in device seconds (0 = never)")
     a = ap.parse_args(argv)
     serve(a.arch, smoke=a.smoke, n_requests=a.requests, slots=a.slots,
-          max_new=a.max_new, cache_len=a.cache_len, backend=a.backend)
+          max_new=a.max_new, cache_len=a.cache_len, backend=a.backend,
+          program=a.program, drift_step_s=a.drift_step,
+          recal_every_s=a.recal_every)
 
 
 if __name__ == "__main__":

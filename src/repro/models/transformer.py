@@ -194,6 +194,20 @@ def _apply_block_decode(
 # ---------------------------------------------------------------------------
 
 
+def _lin_operand(w, d_in: int, dtype=None):
+    """A spiking-linear weight operand for ``backend.spiking_linear``.
+
+    Programmed PCM state (:class:`repro.aimc_device.AIMCDeviceState`, from
+    ``engine.program`` / ``aimc_device.program_lm_tree``) passes through
+    as-is — it is already the ``[d_in, d_out]`` crossbar view; float arrays
+    keep the legacy reshape-to-matrix behaviour."""
+    from repro.aimc_device import AIMCDeviceState
+
+    if isinstance(w, AIMCDeviceState):
+        return w
+    return w.astype(dtype or jnp.float32).reshape(d_in, -1)
+
+
 def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array, backend) -> Array:
     """SSA attention over spike trains s [T,B,S,d] (paper Eq. 6).
 
@@ -207,7 +221,7 @@ def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array, backend) 
     ks = jax.random.split(key, 5)
 
     def proj(w, kk):  # LIF(W s^t): spiking Q/K/V generation (Table I)
-        out = backend.spiking_linear(kk, w.astype(s.dtype).reshape(d, -1), s)
+        out = backend.spiking_linear(kk, _lin_operand(w, d, s.dtype), s)
         return out.reshape(T, b, n, -1, hd)
 
     q = proj(params["wq"], ks[0])  # [T,B,S,H,hd]
@@ -228,14 +242,15 @@ def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array, backend) 
         a = backend.ssa_attention(ks[3], qh, kh, vh, causal=True)
     a = jnp.moveaxis(a.reshape(T, b, h, n, hd), 2, 3).reshape(T, b, n, h * hd)
     # LIF on the output projection (spiking neuron tile semantics)
-    return backend.spiking_linear(ks[4], params["wo"].astype(s.dtype).reshape(h * hd, -1), a)
+    return backend.spiking_linear(
+        ks[4], _lin_operand(params["wo"], h * hd, s.dtype), a)
 
 
 def _spiking_mlp(params, s: Array, cfg: ModelConfig, key: Array, backend) -> Array:
     """LIF(W2 LIF(W1 s^t)) — Table I feed-forward row."""
     k1, k2 = jax.random.split(key)
-    h = backend.spiking_linear(k1, params["wi"].astype(s.dtype), s)
-    return backend.spiking_linear(k2, params["wo"].astype(s.dtype), h)
+    h = backend.spiking_linear(k1, _lin_operand(params["wi"], s.shape[-1], s.dtype), s)
+    return backend.spiking_linear(k2, _lin_operand(params["wo"], h.shape[-1], s.dtype), h)
 
 
 def _apply_block_spiking(
@@ -553,7 +568,7 @@ def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
     h, hd, kv = cfg.num_heads, cfg.resolved_head_dim, cfg.num_kv_heads
 
     def proj(w):  # LIF(W s^t) -> [T,B,heads,hd]
-        out = backend.spiking_linear(None, w.astype(jnp.float32).reshape(d, -1), s)
+        out = backend.spiking_linear(None, _lin_operand(w, d), s)
         return out.reshape(t, b, -1, hd)
 
     q = proj(params["wq"])  # [T,B,H,hd]
@@ -576,8 +591,7 @@ def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
     a = backend.ssa_attention_decode(slot_keys, q[:, :, :, None, :], kf, vf,
                                      i_max=lcap)
     a = a.reshape(t, b, 1, h * hd).astype(s.dtype)
-    out = backend.spiking_linear(
-        None, params["wo"].astype(jnp.float32).reshape(h * hd, -1), a)
+    out = backend.spiking_linear(None, _lin_operand(params["wo"], h * hd), a)
     return out, {"sk": sk, "sv": sv, "pos": pos + 1}
 
 
@@ -608,9 +622,9 @@ def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
             s = s + _slot_rate_encode(keys_for(200003), ym, s.shape[0])
         else:
             h1 = backend.spiking_linear(
-                None, params["mlp"]["wi"].astype(jnp.float32), s)
+                None, _lin_operand(params["mlp"]["wi"], s.shape[-1]), s)
             s = s + backend.spiking_linear(
-                None, params["mlp"]["wo"].astype(jnp.float32),
+                None, _lin_operand(params["mlp"]["wo"], h1.shape[-1]),
                 h1.astype(s.dtype)).astype(s.dtype)
     return s, cache
 
@@ -620,9 +634,13 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
     """One spiking decode step, entirely through the backend's primitives.
 
     tokens [B,1], seeds [B] uint32 (per-slot request stream ids) ->
-    (logits [B,1,V], new cache).  All sampling (rate coding, SSA
-    comparators) is keyed per slot by f(seed, pos), so a slot's output
-    stream is invariant to which other requests share the batch."""
+    (logits [B,1,V], new cache, activity [B]).  All sampling (rate coding,
+    SSA comparators) is keyed per slot by f(seed, pos), so a slot's output
+    stream is invariant to which other requests share the batch.
+
+    ``activity`` counts each slot's residual-stream spike events this step
+    (input coding + after every block) — the measured quantity the serving
+    layer multiplies by per-event op energies for per-request metering."""
     dt = model_dtype(cfg)
     x = L.embed(params["embed"], tokens, dt) * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
     pos0 = _first_pos(cache)
@@ -630,9 +648,14 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
     enc_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 0))(slot_keys)
     s = _slot_rate_encode(enc_keys, x, cfg.spike_T)  # [T,B,1,d] float32
 
+    def slot_events(st):  # [T,B,1,d] -> [B] spike events
+        return jnp.sum(st.astype(jnp.float32), axis=(0, 2, 3))
+
+    act = slot_events(s)
     new_cache: Dict[str, Any] = {}
     if cfg.num_periods > 0:
-        def period_body(s, xs):
+        def period_body(carry, xs):
+            s, act = carry
             pp, pc, pidx = xs
             nc = {}
             for i, mixer in enumerate(cfg.block_pattern):
@@ -640,10 +663,11 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
                     pp[f"blk{i}"], s, pc[f"blk{i}"], cfg, pctx, mixer,
                     slot_keys, pidx * cfg.period + i, backend)
                 nc[f"blk{i}"] = c
-            return s, nc
+                act = act + slot_events(s)
+            return (s, act), nc
 
-        s, new_cache["periods"] = lax.scan(
-            period_body, s,
+        (s, act), new_cache["periods"] = lax.scan(
+            period_body, (s, act),
             (params["periods"], cache["periods"], jnp.arange(cfg.num_periods)))
     if cfg.remainder_layers:
         rem = {}
@@ -653,27 +677,37 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
                 params["remainder"][f"blk{i}"], s, cache["remainder"][f"blk{i}"],
                 cfg, pctx, cfg.block_pattern[i], slot_keys, base_uid + i, backend)
             rem[f"blk{i}"] = c
+            act = act + slot_events(s)
         new_cache["remainder"] = rem
     xr = SP.rate_decode(s.astype(jnp.float32)).astype(dt)
     logits = _unembed(params, xr, cfg)
-    return logits, new_cache
+    return logits, new_cache, act
 
 
 def decode_step(
     params, cache, tokens: Array, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
     *, moe_impl: str = "ep_a2a", backend=None, seeds: Optional[Array] = None,
+    with_activity: bool = False,
 ):
     """One decoding step. tokens [B,1] -> (logits [B,1,V], new cache).
 
     Spiking SSA configs decode through the pluggable backend's spiking
     primitives over spike-train KV caches (``seeds [B]`` supplies the
     per-slot PRN stream ids; defaults to zeros).  All other configs use the
-    conventional float decode path and ignore ``backend``/``seeds``."""
+    conventional float decode path and ignore ``backend``/``seeds``.
+
+    ``with_activity=True`` appends a per-slot spike-event count ``[B]`` to
+    the return (zeros on the conventional path) — the measured input to the
+    serving layer's per-request energy metering."""
     if _spiking_decode_enabled(cfg):
         if seeds is None:
             seeds = jnp.zeros((tokens.shape[0],), jnp.uint32)
-        return _decode_step_spiking(params, cache, tokens, cfg, pctx,
-                                    backend or _default_backend(), seeds)
+        logits, new_cache, act = _decode_step_spiking(
+            params, cache, tokens, cfg, pctx, backend or _default_backend(),
+            seeds)
+        if with_activity:
+            return logits, new_cache, act
+        return logits, new_cache
     dt = model_dtype(cfg)
     x = L.embed(params["embed"], tokens, dt) * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
 
@@ -714,6 +748,8 @@ def decode_step(
             rem[f"blk{i}"] = c
         new_cache["remainder"] = rem
     logits = _unembed(params, x, cfg)
+    if with_activity:  # conventional path: no spike events
+        return logits, new_cache, jnp.zeros((tokens.shape[0],), jnp.float32)
     return logits, new_cache
 
 

@@ -13,6 +13,18 @@ A miniature vLLM-style serving loop for the Xpikeformer engine:
   slot out of the spiking comparators.
 * **decode** — one jit-compiled batched ``decode_step`` advances every slot;
   the scheduler only does O(slots) host bookkeeping per step.
+* **drift lifecycle** — when the params hold programmed PCM state
+  (:class:`repro.aimc_device.AIMCDeviceState`) and a
+  :class:`~repro.aimc_device.DriftPolicy` is set, the scheduler advances
+  the device clock from the decode-step wall clock (or a fixed per-step
+  quantum) and runs periodic GDC recalibration.  Both are pure leaf-value
+  pytree updates, so the jitted ``decode_step`` is **never recompiled** by
+  aging or recalibration.
+* **energy metering** — every decode step returns per-slot measured
+  spike-event counts; the scheduler converts them to joules (event count x
+  per-event op energy + static per-token cost, Table-II constants) and
+  accounts them per request (:attr:`BatchScheduler.request_energy_j`) and
+  in :class:`ServeStats`.
 
 The decode math runs through the engine's pluggable :class:`~repro.engine.
 Backend` for spiking SSA configs (reference / integer / pallas serve
@@ -31,6 +43,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import aimc_device as AD
+from repro.energy import model as EM
 from repro.models import transformer as T
 from repro.models.moe import ParallelCtx
 from repro.serving import state as ST
@@ -56,6 +70,10 @@ class ServeStats:
     evictions: int = 0
     wall_s: float = 0.0  # whole serve loop (admission/prefill included)
     decode_s: float = 0.0  # batched decode_step calls only
+    spike_events: float = 0.0  # measured residual-stream spike events
+    energy_j: float = 0.0  # metered inference energy (events x op energies)
+    t_device_s: float = 0.0  # PCM device clock at the last decode step
+    recalibrations: int = 0  # GDC recalibrations run by the drift policy
 
     @property
     def tokens_per_sec(self) -> float:
@@ -96,6 +114,7 @@ class BatchScheduler:
         cache_len: int = 64,
         pctx: Optional[ParallelCtx] = None,
         moe_impl: Optional[str] = None,
+        drift: Optional[AD.DriftPolicy] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -104,6 +123,7 @@ class BatchScheduler:
         self.cache_len = cache_len
         self.pctx = pctx or ParallelCtx()
         self.moe_impl = moe_impl or ("ep_a2a" if cfg.is_moe else "dense")
+        self.drift = drift
         self.state = ST.init_state(cfg, slots, cache_len)
         self._decode = ST.make_decode_fn(cfg, self.pctx, backend, self.moe_impl)
         self._prefill = ST.make_prefill_fn(cfg, self.pctx, backend, self.moe_impl)
@@ -111,18 +131,51 @@ class BatchScheduler:
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._remaining: List[int] = [0] * slots
         self.outputs: Dict[int, List[int]] = {}
+        # per-request measured energy / spike events (rid -> totals)
+        self.request_energy_j: Dict[int, float] = {}
+        self.request_spikes: Dict[int, float] = {}
         self.stats = ServeStats()
         self._next_rid = 0
+        # PCM device clock (drift lifecycle): picks up wherever the
+        # programmed params already are — the device does not rejuvenate
+        self._t_device = AD.device_time(params)
+        self._last_recal = self._t_device
+        self._t_image = self._t_device  # device time of the last image fold
+        self._programmed = AD.has_device_state(params)
+        self.stats.t_device_s = self._t_device
+        # static per-decoded-token energy for spiking SSA configs (the
+        # activity-independent ADC/periphery/LIF/comparator work)
+        if getattr(cfg, "spiking", False) and cfg.attention_kind == "ssa":
+            self._e_token_pj = EM.lm_decode_token_energy_pj(
+                cfg.d_model, cfg.num_heads, cfg.resolved_head_dim, cfg.d_ff,
+                cfg.num_layers, cfg.spike_T, cache_len, cfg.vocab_size)
+        else:
+            self._e_token_pj = 0.0
+        self._e_event_pj = EM.decode_synapse_energy_pj()
+
+    def set_params(self, params: Any) -> None:
+        """Swap the served params (e.g. a newly-programmed tree) and re-read
+        the device lifecycle bookkeeping from them."""
+        self.params = params
+        self._programmed = AD.has_device_state(params)
+        self._t_device = AD.device_time(params)
+        self._last_recal = self._t_device
+        self._t_image = self._t_device
+        self.stats.t_device_s = self._t_device
 
     def reset(self) -> None:
         """Drop all requests and state but keep the compiled step functions
-        (fresh server, warm jit cache — used by benchmarks and tests)."""
+        (fresh server, warm jit cache — used by benchmarks and tests).
+        The PCM device clock is *not* reset: drift is physical."""
         self.state = ST.init_state(self.cfg, self.slots, self.cache_len)
         self._queue.clear()
         self._slot_req = [None] * self.slots
         self._remaining = [0] * self.slots
         self.outputs = {}
+        self.request_energy_j = {}
+        self.request_spikes = {}
         self.stats = ServeStats()
+        self.stats.t_device_s = self._t_device
 
     # -- request intake ------------------------------------------------
 
@@ -164,7 +217,7 @@ class BatchScheduler:
             padded = _bucket(max(n_ctx, 1))
             prompt_pad = jnp.zeros((padded,), jnp.int32).at[:n_ctx].set(p[:-1])
             cache1 = T.init_cache(self.cfg, 1, self.cache_len)
-            cache1 = self._prefill(
+            cache1, pre_act = self._prefill(
                 self.params, prompt_pad, jnp.int32(n_ctx),
                 jnp.uint32(req.seed), cache1,
             )
@@ -173,6 +226,16 @@ class BatchScheduler:
             self._slot_req[slot] = req
             self._remaining[slot] = req.max_new
             self.outputs[req.rid] = []
+            # prefill energy is prompt-length dependent: book the measured
+            # prompt spike events + static per-token cost at admission
+            spikes = float(pre_act)
+            e_j = (spikes * self._e_event_pj + n_ctx * self._e_token_pj) * 1e-12
+            self.request_spikes[req.rid] = (
+                self.request_spikes.get(req.rid, 0.0) + spikes)
+            self.request_energy_j[req.rid] = (
+                self.request_energy_j.get(req.rid, 0.0) + e_j)
+            self.stats.spike_events += spikes
+            self.stats.energy_j += e_j
             self.stats.prefill_tokens += n_ctx
             self.stats.admissions += 1
             admitted += 1
@@ -197,15 +260,24 @@ class BatchScheduler:
 
     def step(self) -> int:
         """Admit, then advance every active slot one token.  Returns the
-        number of tokens decoded (0 when idle)."""
+        number of tokens decoded (0 when idle).
+
+        Each step also (a) meters energy — the decode returns per-slot
+        measured spike-event counts, converted to joules and booked against
+        the slot's request — and (b) advances the PCM drift lifecycle when
+        a :class:`~repro.aimc_device.DriftPolicy` is set on programmed
+        params (device clock from decode wall time, periodic GDC
+        recalibration), without recompiling the jitted decode."""
         self.admit()
         if not any(r is not None for r in self._slot_req):
             return 0
         t0 = time.time()
-        logits, self.state = self._decode(self.params, self.state)
+        logits, self.state, act = self._decode(self.params, self.state)
         nxt = np.asarray(self.state.tokens)  # syncs the step
-        self.stats.decode_s += time.time() - t0
+        step_s = time.time() - t0
+        self.stats.decode_s += step_s
         self.stats.decode_steps += 1
+        act = np.asarray(act)
         decoded = 0
         for slot in range(self.slots):
             req = self._slot_req[slot]
@@ -213,11 +285,56 @@ class BatchScheduler:
                 continue
             self.outputs[req.rid].append(int(nxt[slot]))
             decoded += 1
+            spikes = float(act[slot])
+            e_j = (spikes * self._e_event_pj + self._e_token_pj) * 1e-12
+            self.request_spikes[req.rid] = (
+                self.request_spikes.get(req.rid, 0.0) + spikes)
+            self.request_energy_j[req.rid] = (
+                self.request_energy_j.get(req.rid, 0.0) + e_j)
+            self.stats.spike_events += spikes
+            self.stats.energy_j += e_j
             self._remaining[slot] -= 1
             if self._remaining[slot] == 0:
                 self.evict(slot)
         self.stats.decoded_tokens += decoded
+        self._advance_device_clock(step_s)
         return decoded
+
+    def _advance_device_clock(self, step_wall_s: float) -> None:
+        """Drift lifecycle: age the programmed PCM state and periodically
+        GDC-recalibrate, per the :class:`~repro.aimc_device.DriftPolicy`.
+
+        Leaf-value-only pytree updates (``drift_tree_jit`` /
+        ``recalibrate_tree_jit``): shapes, dtypes and the params treedef are
+        unchanged, so the compiled ``decode_step`` stays warm.
+
+        The scalar clock advances every step, but the O(params) image fold
+        (drift re-quantisation) only runs when the drift factor has moved
+        by at least ~half an int8 image LSB since the last fold — at device
+        ages of hours a per-token refresh could not change a single image
+        level and would just burn host time — and always right before a
+        GDC recalibration (which reads the state's own clock)."""
+        pol = self.drift
+        if pol is None or not self._programmed:
+            return
+        dt = pol.seconds_per_step if pol.seconds_per_step > 0 else (
+            step_wall_s * pol.time_scale)
+        self._t_device += dt
+        due_recal = (pol.recal_interval_s > 0
+                     and self._t_device - self._last_recal >= pol.recal_interval_s)
+        # half-LSB criterion: (t/t_image)^-nu_mean moved by > 0.5/127
+        ratio = (1.0 - 0.5 / 127.0) ** (-1.0 / max(pol.cfg.drift_nu_mean, 1e-3))
+        due_image = self._t_device >= max(self._t_image,
+                                          pol.cfg.drift_t0_s) * ratio
+        if due_recal or due_image:
+            self.params = AD.drift_tree_jit(
+                self.params, jnp.float32(self._t_device), pol.cfg)
+            self._t_image = self._t_device
+        if due_recal:
+            self.params = AD.recalibrate_tree_jit(self.params, pol.cfg)
+            self._last_recal = self._t_device
+            self.stats.recalibrations += 1
+        self.stats.t_device_s = self._t_device
 
     def run(self) -> Dict[int, List[int]]:
         """Serve until the queue and all slots drain; returns outputs."""

@@ -139,19 +139,25 @@ def release_slot(state: DecodeState, slot) -> DecodeState:
 def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
     """The single jit-compiled batched decode step over the whole batch.
 
-    ``(params, state) -> (logits [slots,1,V], state')`` — every active slot
-    advances one token (greedy next-token written back into
-    ``state.tokens``).  Runs entirely through the engine backend's spiking
-    primitives for SSA configs; the conventional float path otherwise.
+    ``(params, state) -> (logits [slots,1,V], state', activity [slots])`` —
+    every active slot advances one token (greedy next-token written back
+    into ``state.tokens``).  Runs entirely through the engine backend's
+    spiking primitives for SSA configs; the conventional float path
+    otherwise.  ``activity`` is each slot's measured spike-event count this
+    step (zeros on the float path) — the scheduler turns it into
+    per-request energy.  ``params`` may hold programmed
+    ``AIMCDeviceState`` leaves; the drift lifecycle only rewrites leaf
+    *values*, so one compile serves the server's whole lifetime.
     """
 
     def step(params, state: DecodeState):
-        logits, cache = T.decode_step(
+        logits, cache, act = T.decode_step(
             params, state.cache, state.tokens[:, None], cfg, pctx,
             moe_impl=moe_impl, backend=backend, seeds=state.seeds,
+            with_activity=True,
         )
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-        return logits, dataclasses.replace(state, cache=cache, tokens=nxt)
+        return logits, dataclasses.replace(state, cache=cache, tokens=nxt), act
 
     return jax.jit(step)
 
@@ -159,27 +165,35 @@ def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
 def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
     """Batch-1 prompt prefill through the *same* decode path as serving.
 
-    ``(params, prompt [P], length, seed, cache1) -> cache1'`` — scans the
-    padded prompt through single-token decode, gating cache updates on
-    ``idx < length`` so one compiled scan serves every prompt in a padding
-    bucket.  Going through ``decode_step`` (not the training forward) keeps
-    prefill bit-identical to decoding the prompt token by token, which is
-    what makes batched serving exactly reproduce single-slot decoding.
+    ``(params, prompt [P], length, seed, cache1) -> (cache1', activity)`` —
+    scans the padded prompt through single-token decode, gating cache
+    updates on ``idx < length`` so one compiled scan serves every prompt in
+    a padding bucket.  Going through ``decode_step`` (not the training
+    forward) keeps prefill bit-identical to decoding the prompt token by
+    token, which is what makes batched serving exactly reproduce
+    single-slot decoding.  ``activity`` is the prompt's total spike-event
+    count (valid positions only) — prefill energy is prompt-length
+    dependent and is booked against the request at admission.
     """
 
     def prefill(params, prompt, length, seed, cache1):
-        def body(c, xs):
+        def body(carry, xs):
+            c, act = carry
             tok, idx = xs
-            _, c2 = T.decode_step(
+            _, c2, a = T.decode_step(
                 params, c, tok[None, None], cfg, pctx, moe_impl=moe_impl,
                 backend=backend, seeds=jnp.full((1,), seed, jnp.uint32),
+                with_activity=True,
             )
             keep = idx < length
-            c = jax.tree.map(lambda a, b: jnp.where(keep, b, a), c, c2)
-            return c, None
+            c = jax.tree.map(lambda a_, b_: jnp.where(keep, b_, a_), c, c2)
+            act = act + jnp.where(keep, a[0], 0.0)
+            return (c, act), None
 
-        cache1, _ = lax.scan(body, cache1, (prompt, jnp.arange(prompt.shape[0])))
-        return cache1
+        (cache1, act), _ = lax.scan(
+            body, (cache1, jnp.zeros((), jnp.float32)),
+            (prompt, jnp.arange(prompt.shape[0])))
+        return cache1, act
 
     return jax.jit(prefill)
 

@@ -105,3 +105,34 @@ def two_stage_train(
             log_every=log_every,
         )
     return params, {"ct": l1, "hwat": l2}
+
+
+def train_and_program(
+    params,
+    forward: Callable,
+    data_fn: Callable,
+    *,
+    ct_steps: int,
+    hwat_steps: int,
+    program_key=None,
+    aimc_cfg=None,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 0,
+):
+    """The full paper pipeline: CT -> HWAT -> program onto PCM.
+
+    Returns ``(programmed_params, curves)`` where every linear leaf is an
+    :class:`repro.aimc_device.AIMCDeviceState` at t = 0 — ready for the
+    ``drift_to`` / ``recalibrate`` inference lifecycle (Fig. 7 / Table V).
+    """
+    from repro import aimc_device as AD
+    from repro.core.aimc import AIMCConfig
+
+    cfg = aimc_cfg or AIMCConfig()
+    params, curves = two_stage_train(
+        params, forward, data_fn, ct_steps=ct_steps, hwat_steps=hwat_steps,
+        aimc_cfg=cfg, lr=lr, seed=seed, log_every=log_every,
+    )
+    key = jax.random.PRNGKey(seed + 2) if program_key is None else program_key
+    return AD.program_tree(key, params, cfg), curves

@@ -1,0 +1,322 @@
+"""AIMC device-state subsystem: program / drift_to / recalibrate lifecycle.
+
+Contracts under test (see ``repro/aimc_device.py``):
+
+* :func:`~repro.aimc_device.quantize_weights` is the single source of
+  truth for Table-II quantisation — identical to the 2-D core helpers;
+* programming is deterministic in the key and **one-shot** (a second
+  ``program`` on the same tree raises instead of double-wrapping leaves);
+* ``drift_to`` decays the digital execution image and never changes leaf
+  shapes/dtypes; ``recalibrate`` folds the measured GDC gain into the
+  per-column scales and recovers the global drift factor;
+* the Pallas drift-requantise fold and the programmed-state spiking
+  linear are **bit-exact** vs the ``kernels/ref.py`` oracles at any fixed
+  device time;
+* through full model forwards, drifted logit error grows without GDC and
+  recalibration recovers it (paper §V-B / Fig. 7), with the pallas and
+  integer backends bit-identical at every lifecycle point.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import aimc_device as AD
+from repro.core import aimc as AM
+from repro.core.aimc import AIMCConfig
+from repro.kernels import ops as KOPS
+from repro.kernels import ref as KREF
+
+CFG = AIMCConfig()
+
+
+def _state(rng, shape=(70, 40), cfg=CFG, scale=0.1):
+    w = jax.random.normal(rng, shape) * scale
+    return w, AD.program(jax.random.fold_in(rng, 1), w, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Quantisation dedup + programming
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_weights_matches_core_helpers(rng):
+    """The deduplicated quantiser == the original 2-D core pair."""
+    w = jax.random.normal(rng, (96, 33)) * 0.2
+    levels, scale = AD.quantize_weights(w, CFG)
+    scale0 = AM.column_scale(w, CFG)
+    levels0 = AM.quantize_levels(w, scale0, CFG)
+    np.testing.assert_allclose(np.asarray(scale), np.asarray(scale0), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(levels), np.asarray(levels0))
+
+
+def test_quantize_weights_rank_generic(rng):
+    """Stacked leading axes quantise per-matrix (for scanned layer stacks)."""
+    w = jax.random.normal(rng, (3, 40, 16)) * 0.1
+    levels, scale = AD.quantize_weights(w, CFG)
+    assert levels.shape == (3, 40, 16) and scale.shape == (3, 16)
+    for i in range(3):
+        l2, s2 = AD.quantize_weights(w[i], CFG)
+        np.testing.assert_array_equal(np.asarray(levels[i]), np.asarray(l2))
+        np.testing.assert_allclose(np.asarray(scale[i]), np.asarray(s2))
+
+
+def test_program_deterministic_and_fresh_image(rng):
+    w, st = _state(rng)
+    _, st2 = _state(rng)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert st.levels_t.dtype == jnp.int8
+    assert float(st.t_seconds) == 0.0 and float(st.gdc_gain) == 1.0
+    # at t=0 the digital image is the re-digitised programmed conductance
+    # (full int8 image grid: image_gain steps per programming level)
+    gain = AD.image_gain(CFG)
+    np.testing.assert_array_equal(
+        np.asarray(st.levels_t),
+        np.asarray(jnp.clip(jnp.round((st.levels + st.eps) * gain), -127,
+                            127).astype(jnp.int8)))
+
+
+def test_program_tree_is_one_shot(rng):
+    tree = {"lin": {"w": jax.random.normal(rng, (16, 8)), "b": jnp.zeros(8)},
+            "other": jnp.ones(3)}
+    pt = AD.program_tree(rng, tree, CFG)
+    assert AD.is_programmed(pt) and not AD.is_programmed(tree)
+    assert isinstance(pt["lin"]["hw"], AD.AIMCDeviceState)
+    with pytest.raises(ValueError, match="already programmed"):
+        AD.program_tree(rng, pt, CFG)
+    with pytest.raises(ValueError, match="already programmed"):
+        AD.program_lm_tree(rng, {"periods": {"blk0": {}}, "x": pt}, CFG)
+
+
+def test_engine_program_is_one_shot(rng):
+    from repro.engine import XpikeformerEngine
+
+    eng = XpikeformerEngine.from_config("xpikeformer-vit-smoke",
+                                        backend="integer")
+    eng.init(rng)
+    eng.program(jax.random.fold_in(rng, 3))
+    with pytest.raises(ValueError, match="one-shot"):
+        eng.program(jax.random.fold_in(rng, 4))
+
+
+# ---------------------------------------------------------------------------
+# Drift + GDC lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_drift_decays_digital_image(rng):
+    _, st = _state(rng)
+    mags = []
+    for t in (0.0, 3600.0, 86400.0, 3.15e7):
+        st_t = AD.drift_to(st, t, CFG)
+        assert float(st_t.t_seconds) == t
+        mags.append(int(jnp.sum(jnp.abs(st_t.levels_t.astype(jnp.int32)))))
+        # lifecycle updates never change shapes/dtypes (no-recompile contract)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_t)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+    assert mags[0] > mags[1] > mags[2] > mags[3] > 0
+
+
+def test_recalibrate_recovers_global_drift(rng):
+    """GDC gain restores the effective weights in weight space (§V-B)."""
+    w, st = _state(rng)
+    w_hat = np.asarray(st.levels_t.astype(jnp.float32) * st.eff_scale)
+    base = float(np.mean(np.abs(w_hat - np.asarray(w))))
+    st_d = AD.drift_to(st, 86400.0, CFG)
+    err_nc = float(np.mean(np.abs(
+        np.asarray(st_d.levels_t.astype(jnp.float32) * st_d.eff_scale) - np.asarray(w))))
+    st_r = AD.recalibrate(st_d, CFG)
+    assert float(st_r.gdc_gain) > 1.1  # conductance decayed, gain compensates
+    err_gdc = float(np.mean(np.abs(
+        np.asarray(st_r.levels_t.astype(jnp.float32) * st_r.eff_scale) - np.asarray(w))))
+    assert err_nc > 2.0 * base  # drift hurt
+    assert err_gdc < 0.5 * err_nc  # GDC recovered most of it
+
+
+def test_drift_keeps_program_time_image_grid(rng):
+    """The image grid is frozen at program time: drifting with a *different*
+    AIMCConfig (different image_gain) must not re-image the array on the
+    caller's grid — t=0 drift under any cfg is a no-op on levels_t."""
+    cfg_prog = AIMCConfig(prog_noise_sigma=0.01)  # image_gain 8
+    cfg_other = AIMCConfig(prog_noise_sigma=0.03)  # image_gain 7
+    assert AD.image_gain(cfg_prog) != AD.image_gain(cfg_other)
+    w = jax.random.normal(rng, (48, 24)) * 0.1
+    st = AD.program(rng, w, cfg_prog)
+    st2 = AD.drift_to(st, 0.0, cfg_other)
+    np.testing.assert_array_equal(np.asarray(st.levels_t),
+                                  np.asarray(st2.levels_t))
+
+
+def test_lifecycle_requires_device_state(rng):
+    """Legacy {'hw': dict} trees count as programmed (no re-programming)
+    but cannot be aged — engine.drift_to must raise, not silently no-op."""
+    from repro.engine import XpikeformerEngine
+
+    legacy = {"lin": {"hw": {"levels": jnp.ones((4, 2)), "eps": jnp.zeros((4, 2)),
+                             "nu": jnp.zeros((4, 2)), "scale": jnp.ones(2)},
+                      "b": jnp.zeros(2)}}
+    assert AD.is_programmed(legacy) and not AD.has_device_state(legacy)
+    eng = XpikeformerEngine.from_config("xpikeformer-vit-smoke",
+                                        backend="integer")
+    with pytest.raises(ValueError, match="device clock"):
+        eng.drift_to(60.0, params=legacy)
+    with pytest.raises(ValueError, match="device clock"):
+        eng.recalibrate(params=legacy)
+
+
+def test_drift_tree_and_device_time(rng):
+    tree = {"a": {"w": jax.random.normal(rng, (12, 6)), "b": jnp.zeros(6)}}
+    pt = AD.program_tree(rng, tree, CFG)
+    assert AD.device_time(pt) == 0.0
+    pt2 = AD.drift_tree(pt, 123.0, CFG)
+    assert AD.device_time(pt2) == 123.0
+    pt3 = AD.recalibrate_tree(pt2, CFG)
+    assert float(pt3["a"]["hw"].gdc_gain) > 1.0
+    # jitted variants agree with the eager ones
+    pt4 = AD.drift_tree_jit(pt, jnp.float32(123.0), CFG)
+    for a, b in zip(jax.tree.leaves(pt2), jax.tree.leaves(pt4)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-vs-oracle bit-exactness (the programmed-state Pallas path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(64, 32), (70, 40), (128, 128), (300, 17)])
+def test_drift_requantize_kernel_bit_exact(shape, rng):
+    """Pallas fold kernel == jnp oracle == device drift_to, any shape/t."""
+    _, st = _state(rng, shape)
+    for t in (0.0, 60.0, 3600.0, 1e6, 3.15e7):
+        want = KREF.drift_requantize_ref(st.levels, st.eps, st.nu, t,
+                                         t0=CFG.drift_t0_s,
+                                         img_gain=AD.image_gain(CFG))
+        got = KOPS.drift_requantize(st.levels, st.eps, st.nu, jnp.float32(t),
+                                    t0=CFG.drift_t0_s,
+                                    img_gain=AD.image_gain(CFG))
+        dev = AD.drift_to(st, t, CFG).levels_t
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(dev))
+
+
+def test_programmed_spiking_linear_kernel_bit_exact(rng):
+    """Fold + int8 matmul/LIF pallas path == programmed-state oracle."""
+    _, st = _state(rng, (70, 40))
+    sp = (jax.random.uniform(jax.random.fold_in(rng, 2), (3, 5, 70)) < 0.4
+          ).astype(jnp.float32)
+    bias = jax.random.normal(jax.random.fold_in(rng, 3), (40,)) * 0.1
+    st = AD.recalibrate(AD.drift_to(st, 7200.0, CFG), CFG)
+    for t in (0.0, 7200.0, 1e6):
+        want = KREF.aimc_programmed_linear_ref(
+            sp, st.levels, st.eps, st.nu, st.scale, t, st.gdc_gain, bias,
+            t0=CFG.drift_t0_s, img_gain=AD.image_gain(CFG))
+        got = KOPS.aimc_spiking_linear_programmed(
+            sp, st.levels, st.eps, st.nu, st.scale, jnp.float32(t),
+            st.gdc_gain, bias, t0=CFG.drift_t0_s, img_gain=AD.image_gain(CFG))
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_cached_fold_matches_oracle(rng):
+    """The production path (cached levels_t/eff_scale into the int8 matmul
+    kernel) == the fold-on-the-fly oracle at the state's own t."""
+    _, st = _state(rng, (70, 40))
+    st = AD.recalibrate(AD.drift_to(st, 86400.0, CFG), CFG)
+    sp = (jax.random.uniform(jax.random.fold_in(rng, 2), (4, 3, 70)) < 0.5
+          ).astype(jnp.float32)
+    want = KREF.aimc_programmed_linear_ref(
+        sp, st.levels, st.eps, st.nu, st.scale, float(st.t_seconds),
+        st.gdc_gain, None, t0=CFG.drift_t0_s, img_gain=AD.image_gain(CFG))
+    got = KOPS.aimc_spiking_linear(sp, st.levels_t, st.eff_scale, None)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Full-model drift behaviour (paper §V-B) + backend parity
+# ---------------------------------------------------------------------------
+
+
+def _programmed_engines(rng, backend):
+    from repro.engine import XpikeformerEngine
+
+    acfg = AIMCConfig(drift_nu_sigma=0.005, prog_noise_sigma=0.01)
+    eng = XpikeformerEngine.from_config("xpikeformer-gpt-smoke",
+                                        backend=backend, aimc_cfg=acfg)
+    eng.init(rng)
+    eng.program(jax.random.fold_in(rng, 3))
+    return eng, acfg
+
+
+@pytest.mark.parametrize("backend", ["integer", "reference"])
+def test_drift_degrades_and_gdc_recovers_logits(backend, rng):
+    """Accuracy-vs-t lifecycle on the paper models: logit error vs the
+    freshly-programmed model grows with device time without GDC, and
+    recalibration recovers part of it (§V-B behaviour).
+
+    The paper models execute *every* linear — including the classifier
+    head — through the AIMC crossbars, so the shared-ADC bin noise floors
+    the achievable recovery here; the quantitative >= half-recovery bound
+    lives in the serving soak test (``test_serving.py``), where the LM
+    unembed is digital as in the serving engine."""
+    from repro.data.icl_mimo import MIMOConfig, sample_batch as mimo_batch
+
+    eng, _ = _programmed_engines(rng, backend)
+    x = mimo_batch(jax.random.fold_in(rng, 1), MIMOConfig(), 4)["features"]
+    fwd_rng = jax.random.fold_in(rng, 2)
+    l0 = eng.forward(x, fwd_rng)
+
+    errs_nc = {}
+    for t in (3600.0, 86400.0, 2.6e6):
+        eng.drift_to(t)
+        errs_nc[t] = float(jnp.mean(jnp.abs(eng.forward(x, fwd_rng) - l0)))
+    assert errs_nc[2.6e6] > errs_nc[3600.0] > 0.0, \
+        "drift should degrade monotonically"
+    # recalibrate after an hour of drift: GDC folds the measured gain back
+    eng.drift_to(3600.0)
+    eng.recalibrate()
+    err_gdc = float(jnp.mean(jnp.abs(eng.forward(x, fwd_rng) - l0)))
+    assert err_gdc < errs_nc[3600.0], "GDC must recover logit error"
+
+
+def test_programmed_lifecycle_pallas_bit_exact_vs_integer(rng):
+    """integer == pallas bit-for-bit at every lifecycle point (program,
+    drift, recalibrate) through a full model forward."""
+    from repro.data.icl_mimo import MIMOConfig, sample_batch as mimo_batch
+    from repro.engine import XpikeformerEngine
+
+    x = mimo_batch(jax.random.fold_in(rng, 1), MIMOConfig(), 4)["features"]
+    ei, acfg = _programmed_engines(rng, "integer")
+    ep = XpikeformerEngine.from_config("xpikeformer-gpt-smoke",
+                                       backend="pallas", aimc_cfg=acfg)
+    ep.sim = dataclasses.replace(ep.sim, wmode="hw")
+    for stage in ("programmed", "drifted", "recalibrated"):
+        if stage == "drifted":
+            ei.drift_to(86400.0)
+        elif stage == "recalibrated":
+            ei.recalibrate()
+        ep.params = ei.params
+        li = ei.forward(x, jax.random.fold_in(rng, 2))
+        lp = ep.forward(x, jax.random.fold_in(rng, 2))
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(lp),
+                                      err_msg=f"diverged at {stage}")
+
+
+def test_forward_metering_reports_energy(rng):
+    """engine.forward(metering=True): measured spike counts -> joules."""
+    from repro.engine import XpikeformerEngine
+
+    eng = XpikeformerEngine.from_config("xpikeformer-gpt-smoke",
+                                        backend="integer")
+    eng.init(rng)
+    from repro.data.icl_mimo import MIMOConfig, sample_batch as mimo_batch
+
+    x = mimo_batch(jax.random.fold_in(rng, 1), MIMOConfig(), 2)["features"]
+    logits, report = eng.forward(x, jax.random.fold_in(rng, 2), metering=True)
+    plain = eng.forward(x, jax.random.fold_in(rng, 2))
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(plain))
+    d = report.as_dict()
+    assert d["aimc_pj"] > 0 and d["ssa_pj"] > 0 and d["lif_pj"] > 0
+    assert d["total_j"] > 0 and d["spikes_in"] > 0 and report.calls > 0

@@ -93,6 +93,26 @@ def test_programmed_inference_stays_bit_exact(rng):
     np.testing.assert_array_equal(np.asarray(li), np.asarray(lp))
 
 
+def test_programmed_lifecycle_on_matrix_backend(rng, engine_backend):
+    """program -> drift -> recalibrate executes on the CI-matrix backend
+    (XPIKE_BACKEND): every substrate runs the programmed device state, and
+    lifecycle updates change leaf values only (jit caches stay warm)."""
+    arch = "xpikeformer-gpt-smoke"
+    x = ARCH_INPUTS[arch](jax.random.fold_in(rng, 1))
+    eng = _engine(arch, engine_backend)
+    eng.init(rng)
+    eng.program(jax.random.fold_in(rng, 3))
+    treedef = jax.tree.structure(eng.params)
+    shapes = [(l.shape, l.dtype) for l in jax.tree.leaves(eng.params)]
+    for t in (0.0, 3600.0, 3.15e7):
+        eng.drift_to(t)
+        eng.recalibrate()
+        logits = eng.forward(x, jax.random.fold_in(rng, 2))
+        assert jnp.isfinite(logits).all(), f"{engine_backend} t={t}"
+        assert jax.tree.structure(eng.params) == treedef
+        assert [(l.shape, l.dtype) for l in jax.tree.leaves(eng.params)] == shapes
+
+
 def test_task_helpers(rng):
     vit = _engine("xpikeformer-vit-smoke", "pallas")
     vit.init(rng)

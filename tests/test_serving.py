@@ -150,6 +150,111 @@ def test_generate_on_selected_backend(spiking_setup, engine_backend):
     assert all(0 <= t < vocab for o in outs for t in o)
 
 
+def test_serving_energy_metering(matrix_scheduler):
+    """Per-request energy: measured spike events x op energies, conserved
+    between the per-request map and the aggregate stats."""
+    sch = matrix_scheduler
+    sch.reset()
+    ra = sch.submit(_prompt(0, 4), 5, seed=1)
+    rb = sch.submit(_prompt(1, 6), 3, seed=2)
+    sch.run()
+    st = sch.stats
+    assert st.spike_events > 0 and st.energy_j > 0
+    assert set(sch.request_energy_j) == {ra, rb}
+    assert all(v > 0 for v in sch.request_energy_j.values())
+    total = sum(sch.request_energy_j.values())
+    assert abs(total - st.energy_j) < 1e-9 * max(st.energy_j, 1.0)
+    # 5 + 3 decoded tokens worth of static energy is a lower bound
+    assert st.energy_j >= 8 * sch._e_token_pj * 1e-12 * 0.99
+
+
+def _programmed_setup(spiking_setup):
+    from repro import aimc_device as AD
+
+    cfg, params = spiking_setup
+    # low-scatter device config: GDC (a *global* compensation) is the
+    # paper's answer to near-uniform drift; heavy per-device nu scatter is
+    # exactly what it cannot repair
+    acfg = AD.AIMCConfig(drift_nu_sigma=0.005, prog_noise_sigma=0.01)
+    hw = AD.program_lm_tree(jax.random.PRNGKey(42), params, acfg)
+    return cfg, hw, acfg
+
+
+def test_scheduler_drift_soak(spiking_setup, engine_backend):
+    """Lifecycle soak on the CI-matrix backend: the scheduler advances the
+    device clock per decode step, fires periodic GDC recalibrations, keeps
+    serving valid tokens — and never recompiles the jitted decode_step."""
+    from repro import aimc_device as AD
+
+    cfg, hw, acfg = _programmed_setup(spiking_setup)
+    pol = AD.DriftPolicy(seconds_per_step=600.0, recal_interval_s=2400.0,
+                         cfg=acfg)
+    sch = BatchScheduler(hw, cfg, get_backend(engine_backend), slots=2,
+                         cache_len=32, drift=pol)
+    rids = [sch.submit(_prompt(i, 3 + i), 6, seed=10 + i) for i in range(4)]
+    outs = sch.run()
+    st = sch.stats
+    assert all(len(outs[r]) == 6 for r in rids)
+    assert all(0 <= t < cfg.vocab_size for r in rids for t in outs[r])
+    assert st.t_device_s == 600.0 * st.decode_steps
+    assert st.recalibrations >= 2, "periodic GDC must have fired"
+    assert sch._decode._cache_size() == 1, \
+        "drift lifecycle must not recompile decode_step"
+    assert st.energy_j > 0 and len(sch.request_energy_j) == 4
+
+
+def test_scheduler_gdc_recovers_half_logit_error(spiking_setup):
+    """Acceptance bound (on the integer hardware oracle): after a day of
+    drift, one GDC recalibration recovers >= half of the drift-induced
+    logit error of the batched decode step — through leaf-value-only param
+    updates (the compiled decode_step is reused for all three variants)."""
+    from repro import aimc_device as AD
+
+    cfg, hw, acfg = _programmed_setup(spiking_setup)
+    sch = BatchScheduler(hw, cfg, IntegerBackend(), slots=2, cache_len=32)
+    sch.submit(_prompt(0, 5), 8, seed=1)
+    sch.submit(_prompt(1, 4), 8, seed=2)
+    sch.admit()
+    sch.step()
+    sch.step()
+    state = sch.state  # frozen mid-serve snapshot
+
+    l0, _, _ = sch._decode(hw, state)
+    hw_drift = AD.drift_tree(hw, 86400.0, acfg)
+    ld, _, _ = sch._decode(hw_drift, state)
+    lr, _, _ = sch._decode(AD.recalibrate_tree(hw_drift, acfg), state)
+    err_nc = float(jnp.mean(jnp.abs(ld - l0)))
+    err_gdc = float(jnp.mean(jnp.abs(lr - l0)))
+    assert err_nc > 0.0, "a day of drift must perturb the logits"
+    assert err_gdc <= 0.5 * err_nc, (
+        f"GDC recovered too little: {err_gdc:.4f} vs no-GDC {err_nc:.4f}")
+    assert sch._decode._cache_size() == 1, \
+        "lifecycle param updates must reuse the compiled decode_step"
+
+
+def test_engine_serve_keeps_device_aging_across_calls(spiking_setup):
+    """Drift is physical: a second engine.serve() on the cached scheduler
+    must continue from the aged device clock, not rejuvenate it from a
+    stale engine param tree."""
+    from repro import aimc_device as AD
+    from repro.engine import XpikeformerEngine
+
+    cfg, params = spiking_setup
+    eng = XpikeformerEngine.from_config(cfg, backend="integer")
+    eng.params = params
+    eng.program(jax.random.PRNGKey(5))
+    pol = AD.DriftPolicy(seconds_per_step=300.0)
+    _, st1 = eng.serve([_prompt(0, 3)], max_new=3, slots=2, cache_len=32,
+                       drift=pol)
+    assert st1.t_device_s == 300.0 * st1.decode_steps
+    assert AD.device_time(eng.params) == st1.t_device_s, \
+        "engine must adopt the aged device state after serve()"
+    _, st2 = eng.serve([_prompt(1, 3)], max_new=3, slots=2, cache_len=32,
+                       drift=pol)
+    assert st2.t_device_s == st1.t_device_s + 300.0 * st2.decode_steps, \
+        "second serve() must continue aging, not restart at t=0"
+
+
 def test_decode_state_pytree_roundtrip(spiking_setup):
     """DecodeState is a jit-transparent pytree; slot splice/zero invert."""
     from repro.serving import init_state, release_slot, splice_request

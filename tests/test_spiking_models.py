@@ -63,11 +63,16 @@ def test_hwat_then_program_pipeline(rng):
     params, curves = two_stage_train(params, fwd, data, ct_steps=5, hwat_steps=3,
                                      lr=1e-3)
     assert len(curves["ct"]) == 5 and len(curves["hwat"]) == 3
-    hw = program_model(rng, params, AIMCConfig())
+    from repro import aimc_device as AD
+
+    acfg = AIMCConfig()
+    hw = program_model(rng, params, acfg)
     b = img_batch(rng, icfg, 4)
     for t in (0.0, 3.15e7):
-        logits = vit_forward(hw, b["images"], vcfg,
-                             AIMCSim(wmode="hw", t_seconds=t, gdc=True), rng)
+        # device lifecycle: drift the programmed state to t, then GDC
+        drifted = AD.recalibrate_tree(AD.drift_tree(hw, t, acfg), acfg)
+        logits = vit_forward(drifted, b["images"], vcfg,
+                             AIMCSim(wmode="hw"), rng)
         assert jnp.isfinite(logits).all()
 
 
