@@ -11,6 +11,13 @@ Drives the continuous-batching ``BatchScheduler`` (one jitted batched
   ``speedup@N`` is exactly what continuous batching buys.
 * **backend sweep** — spiking SSA archs decode through every engine
   backend (reference / integer / pallas-interpret on CPU).
+* **mesh sweep** (``--mesh DATAxMODEL``, needs data*model devices — run
+  under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the same
+  load served through ``repro.distributed.Executor`` on a (data, model)
+  host mesh: a tensor+data-parallel leg and a data-parallel-only leg, each
+  gated as a ratio vs the single-device scheduler (baseline_mesh.json;
+  host-mesh "devices" share one CPU, so the ratios track collective /
+  partitioning overhead, not real-silicon speedup).
 
 JSON output carries both absolute tok/s and machine-robust *ratios*
 (batched-vs-sequential speedup, backend-vs-reference relative throughput);
@@ -52,6 +59,56 @@ def _measure(params, cfg, backend, *, slots, cache_len, **kw):
     _serve_once(sch, cfg, **kw)  # warmup: compiles prefill + decode
     sch.reset()
     return _serve_once(sch, cfg, **kw)
+
+
+def bench_mesh(smoke: bool = True, *, mesh_spec: str = "2x4", batch: int = 8,
+               max_new: int = 8, backend: str = "integer"):
+    """Mesh serving sweep -> the same {results, ratios} JSON shape.
+
+    Ratios (gated against benchmarks/baseline_mesh.json in the
+    multi-device CI job): sharded decode throughput relative to the
+    single-device scheduler, for (data, model) and (data*model, 1)."""
+    from repro.distributed import Executor
+    from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
+
+    d, m = parse_mesh_spec(mesh_spec)
+    cfg = reduced_config(SPIKING_ARCH) if smoke else get_config(SPIKING_ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    be = get_backend(backend)
+    kw = dict(n_requests=batch, max_new=max_new)
+    results, ratios = [], {}
+
+    single = _measure(params, cfg, be, slots=batch, cache_len=64, **kw)
+    results.append({
+        "name": f"serve/{SPIKING_ARCH}[{backend},single]", "arch": SPIKING_ARCH,
+        "backend": backend, "slots": batch,
+        "tokens_per_sec": single.tokens_per_sec,
+        "decode_tokens_per_sec": single.decode_tokens_per_sec,
+    })
+    for shape in ((d, m), (d * m, 1)):
+        ex = Executor(params, cfg, be, make_serving_mesh(shape))
+        sch = ex.scheduler(slots=batch, cache_len=64)
+        _serve_once(sch, cfg, **kw)  # warmup (compiles sharded decode)
+        sch.reset()
+        st = _serve_once(sch, cfg, **kw)
+        tag = f"dp{shape[0]}_tp{shape[1]}"
+        results.append({
+            "name": f"serve/{SPIKING_ARCH}[{backend},mesh_{tag}]",
+            "arch": SPIKING_ARCH, "backend": backend, "slots": batch,
+            "tokens_per_sec": st.tokens_per_sec,
+            "decode_tokens_per_sec": st.decode_tokens_per_sec,
+        })
+        ratios[f"mesh_rel_{tag}_{SPIKING_ARCH}"] = (
+            st.decode_tokens_per_sec / max(single.decode_tokens_per_sec, 1e-9))
+
+    return {
+        "meta": {"smoke": smoke, "batch": batch, "max_new": max_new,
+                 "mesh": [d, m], "backend": backend,
+                 "device": jax.devices()[0].platform,
+                 "n_devices": len(jax.devices())},
+        "results": results,
+        "ratios": ratios,
+    }
 
 
 def bench(smoke: bool = True, *, batch: int = 8, max_new: int = 8,
@@ -136,8 +193,15 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh sweep instead of the backend sweep, e.g. 2x4 "
+                         "(gate vs benchmarks/baseline_mesh.json)")
     a = ap.parse_args(argv)
-    out = bench(smoke=a.smoke, batch=a.batch, max_new=a.max_new)
+    if a.mesh:
+        out = bench_mesh(smoke=a.smoke, mesh_spec=a.mesh, batch=a.batch,
+                         max_new=a.max_new)
+    else:
+        out = bench(smoke=a.smoke, batch=a.batch, max_new=a.max_new)
     for r in out["results"]:
         print(f"{r['name']:48s} {r['tokens_per_sec']:10.1f} tok/s e2e  "
               f"{r['decode_tokens_per_sec']:10.1f} tok/s decode  slots={r['slots']}")

@@ -228,11 +228,29 @@ def recalibrate(state: AIMCDeviceState, cfg: AIMCConfig) -> AIMCDeviceState:
     Hardware reads the summed absolute conductance with a calibration input
     at t and rescales by ``sum |G(t_program)| / sum |G(t)|`` — one scalar
     per crossbar ('global', not per-device).  The measured gain is folded
-    into :attr:`AIMCDeviceState.eff_scale` until the next recalibration."""
-    g0 = jnp.sum(jnp.abs(state.levels + state.eps), axis=(-2, -1))
-    df = _drift_factor(state.nu, state.t_seconds[..., None, None], cfg)
-    gt = jnp.sum(jnp.abs((state.levels + state.eps) * df), axis=(-2, -1))
-    return dataclasses.replace(state, gdc_gain=g0 / jnp.maximum(gt, 1e-9))
+    into :attr:`AIMCDeviceState.eff_scale` until the next recalibration.
+
+    The calibration read goes through the shared ADC, so both sums are
+    taken over the *digitised image* of the array (the int8 image grid) and
+    accumulated as integers.  Integer accumulation is associativity-free:
+    a mesh-sharded crossbar (``repro.distributed``) psums per-shard partial
+    reads and measures bit-identically to the single-device oracle — the
+    analog float sum would differ in the last ulp under a partitioned
+    reduction and break sharded-vs-single-device bit-exactness.
+
+    Both images are recomputed from the frozen programming record rather
+    than trusting ``levels_t`` (which a caller may not have refreshed to
+    the current clock) — recalibration is a rare event, so the two extra
+    O(d_in*d_out) folds buy robustness over a cached-sum micro-win."""
+    img_gain = jnp.round(1.0 / state.img_inv)[..., None, None]
+    img0 = _requantize(state.levels, state.eps, state.nu,
+                       jnp.zeros_like(state.t_seconds), cfg, img_gain)
+    imgt = _requantize(state.levels, state.eps, state.nu, state.t_seconds,
+                       cfg, img_gain)
+    g0 = jnp.sum(jnp.abs(img0.astype(jnp.int32)), axis=(-2, -1))
+    gt = jnp.sum(jnp.abs(imgt.astype(jnp.int32)), axis=(-2, -1))
+    gain = g0.astype(jnp.float32) / jnp.maximum(gt, 1).astype(jnp.float32)
+    return dataclasses.replace(state, gdc_gain=gain)
 
 
 # ---------------------------------------------------------------------------

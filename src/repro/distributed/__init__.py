@@ -1,0 +1,30 @@
+"""Mesh-sharded distributed execution for the Xpikeformer engine.
+
+The subsystem every multi-device scaling path builds on (see README
+"Distributed serving"):
+
+    Executor            — params / AIMC device state / DecodeState placed
+        |                 on a (data, model) mesh; mesh-wide forward;
+        |                 data-parallel continuous-batching scheduler
+    ShardedBackend      — tensor-parallel spiking primitives via shard_map:
+        |                 column/row-parallel crossbar linears (integer
+        |                 spike-count psum), head-parallel SSA decode with
+        |                 f(seed, pos, head) PRN streams
+    TPPlan / TP_PARTS   — which leaves the `model` axis shards (shared by
+                          placement and execution, so they always agree)
+
+Sharded execution on the `integer` / `pallas` backends is bit-exact vs the
+single-device oracle — through full forwards and whole scheduler runs with
+mid-flight admission, eviction, PCM drift and GDC recalibration.
+"""
+
+from repro.distributed.backend import TP_PARTS, ShardedBackend, TPPlan
+from repro.distributed.executor import Executor, param_pspecs_for_tree
+
+__all__ = [
+    "Executor",
+    "ShardedBackend",
+    "TPPlan",
+    "TP_PARTS",
+    "param_pspecs_for_tree",
+]

@@ -1,0 +1,294 @@
+"""ShardedBackend: tensor-parallel spiking primitives under ``shard_map``.
+
+The hardware analogue (paper §IV): Xpikeformer's throughput comes from
+*spatial* parallelism — per-head SSA engine cores running concurrently and
+AIMC crossbars tiled over output columns.  This module maps that onto the
+``model`` axis of a ``(data, model)`` jax mesh:
+
+* **column-parallel spiking linear** (``part="col"`` — Q/K/V projections,
+  MLP in): crossbar *output columns* are sharded; the LIF membrane is
+  per-column, so each shard quantises, accumulates and fires its own
+  columns with zero communication.
+* **row-parallel spiking linear** (``part="row"`` — attention out, MLP
+  out): crossbar *input rows* are sharded; each shard accumulates its
+  partial spike counts (shard-local programmed-AIMC matmul —
+  ``kernels.ops.aimc_matmul_counts`` / ``kernels.ref.aimc_counts_ref``),
+  the counts **psum** across ``model``, and scale/bias/LIF fire once on the
+  reduced currents.  Counts are integer-valued f32, so the cross-shard
+  reduction is *exact* and sharded == single-device bit-for-bit.
+* **head-parallel SSA decode**: each shard runs the packed popcount tile
+  over its own heads, drawing comparator integers from the per-``(seed,
+  pos, head)`` streams (``draw_slot_decode_prns`` with the shard's global
+  head offset ``lax.axis_index("model") * h_local``) — exactly the
+  integers the single-device oracle draws for those heads.
+
+Everything else (rate coding, embed/unembed, residual adds, cache
+scatters) stays outside ``shard_map`` and is partitioned by GSPMD from the
+parameter/state placements (``repro.distributed.executor``); batch/slot
+dimensions ride the ``data`` axis.
+
+Bit-exactness holds because every sharded reduction is over integer-valued
+operands and every PRN stream is keyed by *logical* (slot, position, head)
+coordinates, never by mesh coordinates.  Tensor parallelism engages for
+the bit-exact digital substrates (``integer`` / ``pallas``); the
+``reference`` backend's analog simulation (row-block ADC clipping, read
+noise) is not decomposable across row shards, so it passes through and is
+partitioned by GSPMD only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.aimc_device import AIMCDeviceState
+from repro.core import aimc as AM
+from repro.kernels import ops as KOPS
+from repro.kernels import ref as KREF
+# single source of the jax.shard_map / jax.experimental shim
+from repro.models.moe import _shard_map
+
+Array = jax.Array
+
+# which spiking-linear leaves are column- vs row-parallel (Megatron-style:
+# the paper's per-head SSA cores and column-tiled crossbars)
+TP_PARTS = {"wq": "col", "wk": "col", "wv": "col", "wi": "col", "wo": "row"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TPPlan:
+    """What the ``model`` axis can shard for a given config.
+
+    Derived once from (cfg, mesh) and shared by parameter placement and
+    the :class:`ShardedBackend`, so the two always agree on which leaves
+    are sharded."""
+
+    tp: int = 1  # model-axis size
+    heads: bool = False  # h % tp == 0 and kv % tp == 0: SSA cores shardable
+
+    @classmethod
+    def from_config(cls, cfg, tp: int) -> "TPPlan":
+        if tp <= 1:
+            return cls()
+        nh = getattr(cfg, "num_heads", 0) or 0
+        kv = getattr(cfg, "num_kv_heads", 0) or 0
+        return cls(tp=tp, heads=(nh > 0 and nh % tp == 0 and kv % tp == 0))
+
+    def col_ok(self, d_out: int) -> bool:
+        return self.tp > 1 and d_out % self.tp == 0
+
+    def row_ok(self, d_in: int) -> bool:
+        return self.tp > 1 and d_in % self.tp == 0
+
+
+def _mat_dims(p: Any) -> Tuple[int, int]:
+    """(d_in, d_out) of a normalised linear-param leaf."""
+    if "hw" in p:
+        hw = p["hw"]
+        shape = hw.shape if isinstance(hw, AIMCDeviceState) else hw["levels"].shape
+    else:
+        shape = p["w"].shape
+    return int(shape[-2]), int(shape[-1])
+
+
+def _state_specs(col: bool, axis: str, lead: int = 0) -> AIMCDeviceState:
+    """Per-field PartitionSpecs for a device state's crossbar matrix view.
+
+    ``lead`` counts leading stack axes (0 for scan-sliced 2-D states inside
+    shard_map, 1 for period-stacked leaves at placement time).  The single
+    source of the AIMCDeviceState field -> spec mapping: parameter
+    placement (``executor.param_pspecs_for_tree``) and the shard_map
+    in_specs both derive from here, so they cannot disagree."""
+    nl = (None,) * lead
+    mat = P(*nl, None, axis) if col else P(*nl, axis, None)
+    vec = P(*nl, axis) if col else P()
+    sc = P()
+    return AIMCDeviceState(levels=mat, eps=mat, nu=mat, scale=vec,
+                           t_seconds=sc, gdc_gain=sc, levels_t=mat, img_inv=sc)
+
+
+class ShardedBackend:
+    """Tensor-parallel wrapper over a bit-exact engine backend.
+
+    Implements the :class:`repro.engine.Backend` protocol; the mesh-aware
+    entry points (``part=`` on ``spiking_linear``, ``h0=`` on
+    ``ssa_attention_decode``) select the shard_map decomposition.  Two
+    instances serve a mesh scheduler: the *decode* instance additionally
+    shards the slot/batch dimension over ``data`` (``batch_axis="data"``);
+    the *prefill* instance replicates it (prefill is batch-1).
+    """
+
+    differentiable = False
+
+    def __init__(self, inner, mesh, cfg, *, batch_axis: Optional[str] = "data",
+                 model_axis: str = "model"):
+        from repro.parallel import sharding as SH
+
+        sizes = SH.axis_sizes(mesh)
+        self.inner = inner
+        self.mesh = mesh
+        self.cfg = cfg
+        self.model_axis = model_axis if sizes.get(model_axis, 1) > 1 else None
+        self.batch_axis = batch_axis if sizes.get(batch_axis or "", 1) > 1 else None
+        self.data = sizes.get(batch_axis, 1) if self.batch_axis else 1
+        # the analog reference path is not row-decomposable (per-row-block
+        # ADC + read noise); TP engages for the digital substrates only
+        if inner.name not in ("integer", "pallas"):
+            self.model_axis = None
+        self.plan = TPPlan.from_config(
+            cfg, sizes.get(model_axis, 1) if self.model_axis else 1)
+        self.name = f"sharded[{inner.name}]"
+        self.bit_exact = inner.bit_exact
+
+    # -- spec helpers ---------------------------------------------------
+
+    def _batch(self, dim: int) -> Optional[str]:
+        if self.batch_axis and dim % self.data == 0:
+            return self.batch_axis
+        return None
+
+    def _x_spec(self, ndim: int, batch_dim: int, feat: Optional[str]) -> P:
+        spec: list = [None] * ndim
+        if ndim >= 3:  # [T, batch, ..., features]
+            spec[1] = self._batch(batch_dim)
+        if feat is not None:
+            spec[-1] = feat
+        return P(*spec)
+
+    # -- passthrough primitives ----------------------------------------
+
+    def ssa_attention(self, key, q, k, v, *, causal=False):
+        return self.inner.ssa_attention(key, q, k, v, causal=causal)
+
+    def lif(self, currents, *, beta=0.5, v_thresh=1.0):
+        return self.inner.lif(currents, beta=beta, v_thresh=v_thresh)
+
+    # -- head-parallel SSA decode --------------------------------------
+
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max,
+                             h0: Union[int, Array] = 0):
+        h = q.shape[2]
+        if self.model_axis is None or not self.plan.heads or h % self.plan.tp:
+            return self.inner.ssa_attention_decode(slot_keys, q, k, v,
+                                                   i_max=i_max, h0=h0)
+        axis = self.model_axis
+        h_local = h // self.plan.tp
+        b = self._batch(q.shape[1])
+        kv_spec = P(None, b, axis, None, None)
+
+        def body(sk, qb, kb, vb):
+            off = jnp.asarray(h0) + lax.axis_index(axis) * h_local
+            return self.inner.ssa_attention_decode(sk, qb, kb, vb,
+                                                   i_max=i_max, h0=off)
+
+        return _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(b), kv_spec, kv_spec, kv_spec),
+            out_specs=kv_spec,
+        )(slot_keys, q, k, v)
+
+    # -- tensor-parallel spiking linear --------------------------------
+
+    def spiking_linear(self, key, p, spikes, sim=None, *, part=None):
+        from repro import engine as E
+
+        pn = E._linear_parts(p)
+        d_in, d_out = _mat_dims(pn)
+        active = (self.model_axis is not None and (
+            (part == "col" and self.plan.col_ok(d_out))
+            or (part == "row" and self.plan.row_ok(d_in))))
+        if not active:
+            return self.inner.spiking_linear(key, p, spikes, sim, part=part)
+        if part == "col":
+            return self._col_linear(key, pn, spikes, sim)
+        return self._row_linear(key, pn, spikes, sim)
+
+    def _p_specs(self, p, col: bool):
+        axis = self.model_axis
+        mat = P(None, axis) if col else P(axis, None)
+        vec = P(axis) if col else P()
+        specs = {}
+        if "w" in p:
+            specs["w"] = mat
+        if "hw" in p:
+            hw = p["hw"]
+            specs["hw"] = (_state_specs(col, axis)
+                           if isinstance(hw, AIMCDeviceState)
+                           else {"levels": mat, "scale": vec})
+        specs["b"] = vec if p.get("b") is not None else None
+        return specs
+
+    def _col_linear(self, key, p, spikes, sim):
+        """Output columns sharded: each shard fires its own LIF columns."""
+        x_in = self._x_spec(spikes.ndim, spikes.shape[1], None)
+        x_out = self._x_spec(spikes.ndim, spikes.shape[1], self.model_axis)
+        inner, p_specs = self.inner, self._p_specs(p, col=True)
+
+        if key is None:
+            def body(pl_, sp_):
+                return inner.spiking_linear(None, pl_, sp_, sim)
+
+            return _shard_map(body, mesh=self.mesh,
+                              in_specs=(p_specs, x_in),
+                              out_specs=x_out)(p, spikes)
+
+        def body(k_, pl_, sp_):
+            return inner.spiking_linear(k_, pl_, sp_, sim)
+
+        return _shard_map(body, mesh=self.mesh,
+                          in_specs=(P(), p_specs, x_in),
+                          out_specs=x_out)(key, p, spikes)
+
+    def _row_linear(self, key, p, spikes, sim):
+        """Input rows sharded: psum integer spike counts, fire LIF once.
+
+        The cross-shard reduction runs on integer-valued f32 partial counts
+        (exact), then scale/bias/LIF replay the fused kernel's op sequence
+        on the reduced currents — bit-identical to the single-device fused
+        ``aimc_spiking_linear``."""
+        from repro import engine as E
+
+        axis = self.model_axis
+        acfg = (sim or E._IDEAL_SIM).cfg
+        inner = self.inner
+        use_kernel = getattr(inner, "interpret", None) is not None  # pallas
+        x_in = self._x_spec(spikes.ndim, spikes.shape[1], axis)
+        x_out = self._x_spec(spikes.ndim, spikes.shape[1], None)
+
+        def body(pl_, sp_):
+            flat, unflatten = E._flatten_time(sp_)
+            flat = flat.astype(jnp.float32)
+            if "hw" in pl_:
+                hw = pl_["hw"]
+                if isinstance(hw, AIMCDeviceState):
+                    levels, scale = hw.levels_t, hw.eff_scale
+                else:
+                    levels, scale = hw["levels"].astype(jnp.int8), hw["scale"]
+            else:
+                # per-column scale needs the *global* column max: pmax is
+                # order-invariant, so shard-local quantisation with the
+                # pmax'd scale reproduces the single-device levels exactly
+                amax = lax.pmax(jnp.max(jnp.abs(pl_["w"]), axis=-2), axis)
+                scale = jnp.where(amax > 0, amax / acfg.levels, 1.0
+                                  ).astype(jnp.float32)
+                levels = AM.quantize_levels(pl_["w"], scale, acfg
+                                            ).astype(jnp.int8)
+            if use_kernel:
+                counts = KOPS.aimc_matmul_counts(flat, levels,
+                                                 interpret=inner.interpret)
+            else:
+                counts = KREF.aimc_counts_ref(flat, levels)
+            counts = lax.psum(counts, axis)  # exact: integer-valued f32
+            pre = counts * scale[None, None, :]
+            if pl_.get("b") is not None:
+                pre = pre + pl_["b"].astype(jnp.float32)[None, None, :]
+            return unflatten(inner.lif(pre))
+
+        return _shard_map(body, mesh=self.mesh,
+                          in_specs=(self._p_specs(p, col=False), x_in),
+                          out_specs=x_out)(p, spikes)

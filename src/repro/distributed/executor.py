@@ -1,0 +1,296 @@
+"""Executor: the whole inference stack placed on a ``(data, model)`` mesh.
+
+One object owns the mesh placement of everything serving needs:
+
+* **params / AIMC device state** — spiking-linear leaves (float weights or
+  programmed :class:`~repro.aimc_device.AIMCDeviceState`) are tensor-
+  parallel over ``model`` per :data:`~repro.distributed.backend.TP_PARTS`
+  (Q/K/V/MLP-in column-sharded, attention-out/MLP-out row-sharded);
+  everything else is replicated.
+* **DecodeState** — decode slots are data-parallel: the slot axis of every
+  cache leaf, token/seed/occupancy vector rides the ``data`` axis (via
+  ``parallel.sharding.cache_pspecs``, which also shards the spiking KV
+  head axis over ``model``); mid-flight admission splices a replicated
+  batch-1 prefill into the sharded batch.
+* **backends** — a decode :class:`~repro.distributed.backend.ShardedBackend`
+  (slots over ``data``, TP over ``model``) and a batch-1 prefill instance
+  (TP only).
+
+The scheduler keeps its host-side bookkeeping (queues, energy accounting,
+drift clocks) unchanged — `BatchScheduler(..., placement=executor)` pins
+the jitted decode/prefill/splice out-shardings so the compiled step is
+reused for the server's whole lifetime (drift/GDC updates stay leaf-value-
+only), and per-slot activity/energy gathers transparently from the mesh.
+
+Bit-exactness: with the ``integer`` or ``pallas`` backend, sharded forward
+and a full ``BatchScheduler.run()`` (admissions, evictions, drift + GDC)
+produce bit-identical tokens to the single-device oracle — reductions are
+integer-valued, PRN streams are keyed by logical (seed, pos, head)
+coordinates, and the GDC calibration read is an integer sum
+(``aimc_device.recalibrate``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.aimc_device import AIMCDeviceState
+from repro.distributed.backend import (TP_PARTS, ShardedBackend, TPPlan,
+                                       _state_specs)
+from repro.models import transformer as T
+from repro.models.moe import ParallelCtx
+from repro.parallel import sharding as SH
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter placement (actual trees, including programmed device state)
+# ---------------------------------------------------------------------------
+
+
+def _lead(n: int):
+    return (None,) * n
+
+
+def _leaf_pspec(name: str, leaf: Any, plan: TPPlan, axis: str):
+    """Spec for one spiking-linear leaf (float original shape or programmed
+    matrix-view device state), by its Megatron part."""
+    part = TP_PARTS.get(name)
+    if part is None or plan.tp <= 1:
+        return jax.tree.map(lambda _: P(), leaf)
+    if isinstance(leaf, AIMCDeviceState):
+        d_in, d_out = leaf.shape[-2:]
+        ok = plan.col_ok(d_out) if part == "col" else plan.row_ok(d_in)
+        if not ok:
+            return jax.tree.map(lambda _: P(), leaf)
+        # same field -> spec mapping as the shard_map in_specs (one source)
+        return _state_specs(part == "col", axis, lead=leaf.levels.ndim - 2)
+    # float leaves keep their original (per-head) shapes; shard on whole
+    # heads / ffn columns so the layout matches the shard_map decomposition
+    if name in ("wq", "wk", "wv"):  # [*, d, nh, hd]
+        if leaf.shape[-2] % plan.tp == 0:
+            return P(*_lead(leaf.ndim - 3), None, axis, None)
+    elif name == "wo" and leaf.ndim >= 3:  # attention wo [*, nh, hd, d]
+        if leaf.shape[-3] % plan.tp == 0:
+            return P(*_lead(leaf.ndim - 3), axis, None, None)
+    elif name == "wi":  # [*, d, f]
+        if leaf.shape[-1] % plan.tp == 0:
+            return P(*_lead(leaf.ndim - 2), None, axis)
+    elif name == "wo":  # mlp wo [*, f, d]
+        if leaf.shape[-2] % plan.tp == 0:
+            return P(*_lead(leaf.ndim - 2), axis, None)
+    return P()
+
+
+def param_pspecs_for_tree(cfg, params: Any, mesh, *, model_axis: str = "model"):
+    """PartitionSpec tree parallel to an *actual* LM param tree.
+
+    Unlike :func:`repro.parallel.sharding.param_pspecs` (which maps the
+    abstract schema), this walks the real tree, so programmed
+    :class:`AIMCDeviceState` leaves get per-field specs on their crossbar
+    matrix view.  Spiking-linear leaves are tensor-parallel per
+    :data:`TP_PARTS`; everything else replicates (the serving layout —
+    a <1B spiking stack is latency-bound, not memory-bound)."""
+    sizes = SH.axis_sizes(mesh)
+    plan = TPPlan.from_config(cfg, sizes.get(model_axis, 1))
+    specs = jax.tree.map(lambda _: P(), params)
+    if not T._spiking_decode_enabled(cfg) or plan.tp <= 1:
+        return specs
+
+    def do_block(bspec: Dict[str, Any], bparams: Dict[str, Any]):
+        mix, mixs = bparams.get("mixer"), bspec.get("mixer")
+        if isinstance(mix, dict) and {"wq", "wk", "wv", "wo"} <= set(mix):
+            for n in ("wq", "wk", "wv", "wo"):
+                mixs[n] = _leaf_pspec(n, mix[n], plan, model_axis)
+        mlp, mlps = bparams.get("mlp"), bspec.get("mlp")
+        if isinstance(mlp, dict) and {"wi", "wo"} <= set(mlp):
+            for n in ("wi", "wo"):
+                mlps[n] = _leaf_pspec(n, mlp[n], plan, model_axis)
+
+    for group in ("periods", "remainder"):
+        if group in specs:
+            for bk in specs[group]:
+                do_block(specs[group][bk], params[group][bk])
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+class Executor:
+    """Mesh-sharded execution of one engine (params + backends + placement).
+
+    ::
+
+        mesh = make_serving_mesh((2, 4))          # (data, model)
+        ex = Executor(params, cfg, "pallas", mesh)
+        logits = ex.forward(tokens, rng)          # TP+DP forward
+        outs, stats = ex.serve(prompts, max_new=16, slots=4)
+
+    or through the engine facade: ``engine.executor(mesh)``.
+    """
+
+    def __init__(self, params, cfg, backend, mesh, *, moe_impl: Optional[str] = None):
+        from repro.engine import get_backend
+
+        self.mesh = mesh
+        self.cfg = cfg
+        self.inner = get_backend(backend)
+        sizes = SH.axis_sizes(mesh)
+        self.data = sizes.get("data", 1)
+        self.model = sizes.get("model", 1)
+        self.moe_impl = moe_impl or ("ep_a2a" if cfg.is_moe else "dense")
+        self.plan = TPPlan.from_config(cfg, self.model)
+        self.param_specs = param_pspecs_for_tree(cfg, params, mesh)
+        self.params = self.place_params(params)
+        spiking = T._spiking_decode_enabled(cfg)
+        if spiking and self.model > 1:
+            self.decode_backend: Any = ShardedBackend(
+                self.inner, mesh, cfg, batch_axis="data")
+            self.prefill_backend: Any = ShardedBackend(
+                self.inner, mesh, cfg, batch_axis=None)
+        else:
+            self.decode_backend = self.prefill_backend = (
+                self.inner if spiking else None)
+        self.pctx = ParallelCtx(
+            mesh=mesh,
+            dp_axes=("data",) if self.data > 1 else (),
+            fsdp_axis=None,
+            tp_axis="model" if self.model > 1 else None,
+            seq_shard=False,
+        )
+        self._fwd = None
+        self._schedulers: Dict[Any, Any] = {}
+
+    # -- placement ------------------------------------------------------
+
+    def _ns(self, spec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return self._ns(P())
+
+    def place_params(self, params):
+        """Commit a param tree to its mesh placement (idempotent; used at
+        construction and after drift/GDC leaf-value updates so the pinned
+        decode executable always sees identical shardings)."""
+        return jax.device_put(params, SH.to_shardings(self.param_specs, self.mesh))
+
+    def state_specs(self, slots: int, cache_len: int):
+        """DecodeState PartitionSpecs: slot axis over ``data``, spiking KV
+        heads over ``model`` (via ``sharding.cache_pspecs``)."""
+        from repro.serving.state import DecodeState
+
+        b = SH.batch_pspec(self.mesh, slots)
+        return DecodeState(
+            cache=SH.cache_pspecs(self.cfg, self.mesh, slots, cache_len),
+            tokens=P(b), seeds=P(b), active=P(b),
+        )
+
+    def state_shardings(self, slots: int, cache_len: int):
+        return SH.to_shardings(self.state_specs(slots, cache_len), self.mesh)
+
+    def place_state(self, state):
+        slots = state.tokens.shape[0]
+        cache_len = _cache_len(state.cache)
+        return jax.device_put(state, self.state_shardings(slots, cache_len))
+
+    def decode_out_shardings(self, slots: int, cache_len: int):
+        """(logits, state, activity) shardings pinned onto the jitted
+        decode step — output placement never drifts, so the step compiles
+        exactly once for the server's lifetime."""
+        b = SH.batch_pspec(self.mesh, slots)
+        return (self._ns(P(b, None, None)),
+                self.state_shardings(slots, cache_len),
+                self._ns(P(b)))
+
+    # -- mesh-wide forward ---------------------------------------------
+
+    def forward(self, tokens: Array, rng: Array) -> Array:
+        """Full (spiking) forward on the mesh: tokens [B, S] -> logits.
+
+        Batch rides ``data`` (when divisible); the spiking linears run
+        through the :class:`ShardedBackend`'s explicit shard_map
+        decomposition (column/row-parallel crossbars with integer-count
+        psum); full-sequence SSA attention draws its comparator PRNs at
+        logical shapes and is partitioned by GSPMD.  Bit-exact vs the
+        single-device backend."""
+        if self._fwd is None:
+            cfg, moe_impl = self.cfg, self.moe_impl
+            backend = self.decode_backend or self.inner
+
+            def fn(params, x, rng):
+                return T.forward(params, {"tokens": x}, cfg, rng=rng,
+                                 backend=backend, moe_impl=moe_impl,
+                                 remat="none")[0]
+
+            self._fwd = jax.jit(fn)
+        b = SH.batch_pspec(self.mesh, int(tokens.shape[0]))
+        tokens = jax.device_put(jnp.asarray(tokens, jnp.int32),
+                                self._ns(P(b, None)))
+        return self._fwd(self.params, tokens, rng)
+
+    # -- data-parallel continuous batching ------------------------------
+
+    def scheduler(self, *, slots: int = 4, cache_len: int = 64, drift=None):
+        """A mesh-sharded :class:`repro.serving.BatchScheduler`: slots are
+        data-parallel, the decode math is tensor-parallel, admission /
+        eviction / energy metering work exactly as on one device.
+        Schedulers are cached per (slots, cache_len) to keep the compiled
+        decode/prefill warm across :meth:`serve` calls."""
+        from repro.serving import BatchScheduler
+
+        key = (slots, cache_len)
+        sch = self._schedulers.get(key)
+        if sch is not None:
+            sch.reset()
+            sch.set_params(self.params)
+            sch.drift = drift
+            return sch
+        sch = BatchScheduler(
+            self.params, self.cfg, self.decode_backend, slots=slots,
+            cache_len=cache_len, pctx=self.pctx, moe_impl=self.moe_impl,
+            drift=drift, placement=self,
+        )
+        self._schedulers[key] = sch
+        return sch
+
+    def serve(self, prompts, max_new: int = 16, *, slots: int = 4,
+              cache_len: int = 64, seed: int = 0, drift=None):
+        """Continuous-batching serve on the mesh -> (outputs, ServeStats)."""
+        sch = self.scheduler(slots=slots, cache_len=cache_len, drift=drift)
+        rids = [sch.submit(p, max_new, seed=seed + i)
+                for i, p in enumerate(prompts)]
+        outs = sch.run()
+        if sch._programmed:
+            # drift is physical: adopt the aged/recalibrated device state
+            self.params = sch.params
+        return [outs[r] for r in rids], sch.stats
+
+
+def _cache_len(cache) -> int:
+    """Recover cache_len from a cache pytree (spiking sk [.., B, T, L, ..]
+    or ANN k [.., B, L, ..] leaves are not needed — any 'pos'-bearing block
+    works because init_state built the tree from cache_schema)."""
+    def find(tree):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                if "sk" in v:
+                    return v["sk"].shape[-3]
+                if "k" in v:
+                    return v["k"].shape[-3]
+                got = find(v)
+                if got is not None:
+                    return got
+        return None
+
+    n = find(cache)
+    return int(n) if n is not None else 0

@@ -88,7 +88,8 @@ class Backend(Protocol):
         ...
 
     def ssa_attention_decode(self, slot_keys: Array, q: Array, k: Array,
-                             v: Array, *, i_max: int) -> Array:
+                             v: Array, *, i_max: int,
+                             h0: Union[int, Array] = 0) -> Array:
         """One-query SSA decode against cached KV spike trains (serving).
 
         ``q [T,B,H,1,d]`` is the token being decoded; ``k``/``v``
@@ -96,9 +97,15 @@ class Backend(Protocol):
         slot's position (zero spikes never beat a comparator draw, so
         validity masking is implicit).  ``slot_keys [B,2]`` are per-slot
         uint32 PRNG keys: every slot draws its own comparator integers so
-        continuous-batching admission cannot perturb running slots.
+        continuous-batching admission cannot perturb running slots; within
+        a slot every head draws from ``f(seed, pos, global head index)``.
         ``i_max`` is the output comparator range — the cache capacity (the
-        hardware tile dimension), fixed regardless of fill level."""
+        hardware tile dimension), fixed regardless of fill level.
+
+        ``h0`` is the mesh-aware entry point: a tensor-parallel shard that
+        owns heads ``[h0, h0+H)`` passes its global head offset (possibly
+        traced) and draws exactly the single-device oracle's integers for
+        those heads (see :class:`repro.distributed.ShardedBackend`)."""
         ...
 
     def lif(self, currents: Array, *, beta: float = 0.5,
@@ -107,8 +114,16 @@ class Backend(Protocol):
         ...
 
     def spiking_linear(self, key: Optional[Array], p: Any, spikes: Array,
-                       sim: Optional[AIMCSim] = None) -> Array:
-        """``LIF(W s^t + b)`` over a ``[T, ..., d_in]`` spike train."""
+                       sim: Optional[AIMCSim] = None, *,
+                       part: Optional[str] = None) -> Array:
+        """``LIF(W s^t + b)`` over a ``[T, ..., d_in]`` spike train.
+
+        ``part`` is a mesh-aware tensor-parallel hint from the model code:
+        ``"col"`` for output-column-sharded layers (Q/K/V projections, MLP
+        in) and ``"row"`` for input-sharded layers whose partial spike
+        counts must psum before the LIF fires (attention out, MLP out).
+        Single-device backends ignore it; ``repro.distributed.
+        ShardedBackend`` uses it to pick the shard_map decomposition."""
         ...
 
 
@@ -176,18 +191,26 @@ class ReferenceBackend:
     def ssa_attention(self, key, q, k, v, *, causal=False):
         return SSA.ssa_attention(key, q, k, v, causal=causal)
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
         d = q.shape[-1]
+        heads = jnp.asarray(h0) + jnp.arange(q.shape[2])
 
         def per_slot(key, qb, kb, vb):  # [T,H,1,d] x [T,H,L,d]
-            k1, k2 = jax.random.split(key)
-            qf, kf, vf = (t.astype(jnp.float32) for t in (qb, kb, vb))
-            counts_s = jnp.einsum("thnd,thld->thnl", qf, kf)
-            p_s = counts_s / d
-            s = SP.bernoulli_st(p_s, jax.random.uniform(k1, p_s.shape))
-            counts_a = jnp.einsum("thnl,thld->thnd", s, vf)
-            p_a = jnp.clip(counts_a / float(i_max), 0.0, 1.0)
-            return SP.bernoulli_st(p_a, jax.random.uniform(k2, p_a.shape))
+            def per_head(hi, qh, kh, vh):  # [T,1,d] x [T,L,d]
+                k1, k2 = jax.random.split(jax.random.fold_in(key, hi))
+                qf, kf, vf = (t.astype(jnp.float32) for t in (qh, kh, vh))
+                counts_s = jnp.einsum("tnd,tld->tnl", qf, kf)
+                p_s = counts_s / d
+                s = SP.bernoulli_st(p_s, jax.random.uniform(k1, p_s.shape))
+                counts_a = jnp.einsum("tnl,tld->tnd", s, vf)
+                p_a = jnp.clip(counts_a / float(i_max), 0.0, 1.0)
+                return SP.bernoulli_st(p_a, jax.random.uniform(k2, p_a.shape))
+
+            # per-(slot, head) streams: f(seed, pos, global head) — the same
+            # convention as the integer/pallas backends, so head-sharded
+            # decode draws shard-locally without perturbing any stream
+            return jax.vmap(per_head, in_axes=(0, 1, 1, 1), out_axes=1)(
+                heads, qb, kb, vb)
 
         return jax.vmap(per_slot, in_axes=(0, 1, 1, 1), out_axes=1)(
             slot_keys, q, k, v
@@ -196,7 +219,7 @@ class ReferenceBackend:
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         return SP.lif(currents, SP.LIFParams(beta=beta, v_thresh=v_thresh))
 
-    def spiking_linear(self, key, p, spikes, sim=None):
+    def spiking_linear(self, key, p, spikes, sim=None, *, part=None):
         sim = sim or _IDEAL_SIM
         p = _linear_parts(p)
         if isinstance(p.get("hw"), AIMCDeviceState):
@@ -249,11 +272,12 @@ class IntegerBackend:
         )
         return out.reshape(t, b, h, n, d)
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
         t, b, h, n1, d = q.shape
         l = k.shape[3]
-        # same per-slot PRN convention as the pallas wrapper (bit-exactness)
-        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d, i_max)
+        # same per-(slot, head) PRN convention as the pallas wrapper
+        # (bit-exactness); h0 offsets the head streams for TP shards
+        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d, i_max, h0)
         g = b * t * h
         out = KREF.ssa_decode_ref(
             jnp.moveaxis(q, 1, 0).reshape(g, 1, d),
@@ -269,7 +293,7 @@ class IntegerBackend:
         out = KREF.lif_ref(flat, beta=beta, v_thresh=v_thresh)
         return out.reshape(currents.shape)
 
-    def spiking_linear(self, key, p, spikes, sim=None):
+    def spiking_linear(self, key, p, spikes, sim=None, *, part=None):
         sim = sim or _IDEAL_SIM
         p = _linear_parts(p)
         levels, scale = _levels_scale(p, sim)
@@ -307,9 +331,9 @@ class PallasBackend:
             q, k, v, key, causal=causal, interpret=self.interpret
         )
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
         return KOPS.ssa_attention_decode_packed(
-            q, k, v, slot_keys, i_max=i_max, interpret=self.interpret
+            q, k, v, slot_keys, h0, i_max=i_max, interpret=self.interpret
         )
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
@@ -318,7 +342,7 @@ class PallasBackend:
             interpret=self.interpret,
         )
 
-    def spiking_linear(self, key, p, spikes, sim=None):
+    def spiking_linear(self, key, p, spikes, sim=None, *, part=None):
         sim = sim or _IDEAL_SIM
         p = _linear_parts(p)
         levels, scale = _levels_scale(p, sim)
@@ -373,10 +397,11 @@ class MeteringBackend:
         self.report.calls += 1
         return out
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max):
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
         from repro.energy import model as EM
 
-        out = self.inner.ssa_attention_decode(slot_keys, q, k, v, i_max=i_max)
+        out = self.inner.ssa_attention_decode(slot_keys, q, k, v, i_max=i_max,
+                                              h0=h0)
         t, b, h, n, d = q.shape
         l = k.shape[3]
         qs, ks, vs = self._count(q), self._count(k), self._count(v)
@@ -397,10 +422,10 @@ class MeteringBackend:
         self.report.calls += 1
         return out
 
-    def spiking_linear(self, key, p, spikes, sim=None):
+    def spiking_linear(self, key, p, spikes, sim=None, *, part=None):
         from repro.energy import model as EM
 
-        out = self.inner.spiking_linear(key, p, spikes, sim)
+        out = self.inner.spiking_linear(key, p, spikes, sim, part=part)
         t = spikes.shape[0]
         d_in, d_out = spikes.shape[-1], out.shape[-1]
         tokens = int(spikes.size // (t * d_in))
@@ -733,3 +758,18 @@ class XpikeformerEngine:
         token-id lists (greedy).  Thin wrapper over :meth:`serve`."""
         outs, _ = self.serve(prompts, max_new, **kwargs)
         return outs
+
+    # -- distributed (mesh) execution ----------------------------------
+
+    def executor(self, mesh, **kwargs):
+        """A :class:`repro.distributed.Executor` over this engine's params:
+        the whole inference stack placed on a ``(data, model)`` mesh —
+        tensor-parallel spiking kernels on ``model``, data-parallel
+        continuous batching on ``data``.  Sharded execution on the
+        integer/pallas backends is bit-exact vs this engine run on one
+        device; see README "Distributed serving"."""
+        from repro.distributed import Executor
+
+        assert self.task == "lm", "the distributed executor serves task='lm'"
+        assert self.params is not None, "call init() first"
+        return Executor(self.params, self.cfg, self.backend, mesh, **kwargs)

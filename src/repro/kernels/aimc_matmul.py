@@ -59,6 +59,65 @@ def _kernel(s_ref, w_ref, scale_ref, bias_ref, out_ref, acc_ref, *, t_steps: int
             out_ref[t] = spike.astype(out_ref.dtype)
 
 
+def _counts_kernel(s_ref, w_ref, out_ref, acc_ref, *, t_steps: int,
+                   n_in_blocks: int):
+    """Crossbar MVM accumulation only — no scale/bias/LIF.
+
+    The shard-local half of a *row-parallel* (d_in-sharded) spiking linear:
+    each mesh shard accumulates its rows' integer spike counts, the counts
+    are psum'd across the ``model`` axis, and the LIF dynamics fire once on
+    the reduced currents (see ``repro.distributed.backend``).  Keeping the
+    partial sums in integer-valued f32 makes the cross-shard reduction
+    exact, so sharded == single-device bit-for-bit."""
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)  # [bin, bout] int8 levels
+    for t in range(t_steps):
+        st = s_ref[t].astype(jnp.float32)  # [bb, bin] binary spikes
+        acc_ref[t] = acc_ref[t] + jnp.dot(st, w, preferred_element_type=jnp.float32)
+
+    @pl.when(ib == n_in_blocks - 1)
+    def _flush():
+        for t in range(t_steps):
+            out_ref[t] = acc_ref[t]
+
+
+def aimc_matmul_counts_kernel(
+    spikes: Array,  # [T, B, d_in] binary (any float/int dtype)
+    w_levels: Array,  # [d_in, d_out] int8 conductance levels
+    *,
+    block_b: int = 128,
+    block_in: int = 128,
+    block_out: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """[T, B, d_out] f32 integer-valued crossbar counts (pre-LIF)."""
+    t, b, d_in = spikes.shape
+    d_out = w_levels.shape[1]
+    block_b = min(block_b, b)
+    block_in = min(block_in, d_in)
+    block_out = min(block_out, d_out)
+    assert b % block_b == 0 and d_in % block_in == 0 and d_out % block_out == 0
+    nb, ni, no = b // block_b, d_in // block_in, d_out // block_out
+    kern = functools.partial(_counts_kernel, t_steps=t, n_in_blocks=ni)
+    return pl.pallas_call(
+        kern,
+        grid=(nb, no, ni),  # d_in innermost: sequential accumulation
+        in_specs=[
+            pl.BlockSpec((t, block_b, block_in), lambda ib, io, ii: (0, ib, ii)),
+            pl.BlockSpec((block_in, block_out), lambda ib, io, ii: (ii, io)),
+        ],
+        out_specs=pl.BlockSpec((t, block_b, block_out), lambda ib, io, ii: (0, ib, io)),
+        out_shape=jax.ShapeDtypeStruct((t, b, d_out), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t, block_b, block_out), jnp.float32)],
+        interpret=interpret,
+    )(spikes, w_levels)
+
+
 def _requant_kernel(t_ref, lv_ref, eps_ref, nu_ref, out_ref, *, t0: float,
                     img_gain: int):
     """Drift-requantise one [block_in, block_out] crossbar tile.

@@ -12,12 +12,13 @@ These are what the framework calls; each wrapper
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.aimc_matmul import (aimc_spiking_linear_kernel,
+from repro.kernels.aimc_matmul import (aimc_matmul_counts_kernel,
+                                       aimc_spiking_linear_kernel,
                                        drift_requantize_kernel)
 from repro.kernels.lif import lif_kernel
 from repro.kernels.ssa_attention import ssa_attention_kernel, ssa_decode_kernel
@@ -103,18 +104,38 @@ def ssa_attention_packed(
 def draw_slot_decode_prns(
     slot_keys: Array,  # [B, 2] uint32 — per-slot PRNG keys
     t: int, h: int, l: int, d: int, i_max: int,
+    h0: Union[int, Array] = 0,
 ) -> Tuple[Array, Array]:
-    """Per-slot comparator integers for one SSA decode step.
+    """Per-(slot, head) comparator integers for one SSA decode step.
 
     Each serving slot draws from its *own* key so the stream a request sees
     depends only on (request seed, position) — never on which other
     requests share the batch.  That is the bit-exactness contract of
     continuous batching: admitting a request mid-flight cannot perturb the
-    spikes of already-running slots.  Returns ``(rs [B,T*H,1,L],
-    ra [B,T*H,1,D])`` with r_s ~ U{0..d-1}, r_a ~ U{0..i_max-1}.
+    spikes of already-running slots.
+
+    Within a slot, every attention head draws from ``fold_in(slot_key,
+    global_head_index)`` — the stream is ``f(seed, pos, head)``.  Per-head
+    keying is what makes *tensor-parallel* decode bit-exact: a shard that
+    owns heads ``[h0, h0+h)`` of a mesh-sharded SSA engine passes its
+    global head offset ``h0`` (possibly traced, e.g. derived from
+    ``lax.axis_index``) and draws exactly the integers the single-device
+    oracle draws for those heads (see ``repro.distributed``).
+
+    Returns ``(rs [B,T*H,1,L], ra [B,T*H,1,D])`` — t-major over the T*H
+    axis, matching the (b, t, h) grid order of the packed decode wrapper —
+    with r_s ~ U{0..d-1}, r_a ~ U{0..i_max-1}.
     """
+    heads = jnp.asarray(h0) + jnp.arange(h)
+
     def per_slot(key):
-        return draw_comparator_prns(key, (t * h, 1, l), (t * h, 1, d), d, i_max)
+        def per_head(hi):
+            kh = jax.random.fold_in(key, hi)
+            return draw_comparator_prns(kh, (t, 1, l), (t, 1, d), d, i_max)
+
+        rs, ra = jax.vmap(per_head)(heads)  # [H, T, 1, *]
+        return (jnp.moveaxis(rs, 0, 1).reshape(t * h, 1, l),
+                jnp.moveaxis(ra, 0, 1).reshape(t * h, 1, d))
 
     return jax.vmap(per_slot)(slot_keys)
 
@@ -125,6 +146,7 @@ def ssa_attention_decode_packed(
     k: Array,  # [T, B, H, L, D] cached key spike train (zeros beyond pos)
     v: Array,  # [T, B, H, L, D] cached value spike train
     slot_keys: Array,  # [B, 2] uint32 per-slot PRNG keys
+    h0: Union[int, Array] = 0,  # global index of q's first head (TP shards)
     *,
     i_max: int,
     interpret: bool = True,
@@ -135,13 +157,15 @@ def ssa_attention_decode_packed(
     (slot, timestep, head) against that slot's cached KV train.  L and D
     are zero-padded to multiples of 32 (zero spikes never beat a
     comparator draw, exactly the :func:`ssa_attention_packed` argument);
-    the comparator PRNs are drawn per slot at logical shapes so the output
-    is bit-identical to the unpadded integer oracle — and independent of
-    which other slots are in flight.
+    the comparator PRNs are drawn per (slot, global head) at logical
+    shapes so the output is bit-identical to the unpadded integer oracle —
+    independent of which other slots are in flight *and* of how the heads
+    are sharded across a mesh (``h0`` names the shard's first global head;
+    it may be traced, e.g. ``lax.axis_index(...) * h_local``).
     """
     t, b, h, n1, d = q.shape
     l = k.shape[3]
-    rs, ra = draw_slot_decode_prns(slot_keys, t, h, l, d, i_max)
+    rs, ra = draw_slot_decode_prns(slot_keys, t, h, l, d, i_max, h0)
     g = b * t * h
     # grid order (b, t, h): matches the [B, T*H, ...] PRN layout
     qf = jnp.moveaxis(q, 1, 0).reshape(g, 1, d).astype(jnp.uint8)
@@ -213,6 +237,38 @@ def aimc_spiking_linear(
     out = aimc_spiking_linear_kernel(
         sp, wp, sc, bi, beta=beta, v_thresh=v_thresh,
         block_b=min(bb, 128), block_in=128, block_out=128, interpret=interpret,
+    )
+    return out[:, :b, :d_out]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def aimc_matmul_counts(
+    spikes: Array,  # [T, B, d_in]
+    w_levels: Array,  # [d_in, d_out] int8
+    *,
+    interpret: bool = True,
+) -> Array:
+    """[T, B, d_out] f32 integer-valued crossbar counts (pre-scale/LIF).
+
+    The shard-local programmed-AIMC matmul of a *row-parallel* spiking
+    linear: each mesh shard runs this over its d_in rows, the counts psum
+    across the ``model`` axis (exact — integer-valued f32), and scale/bias/
+    LIF fire once on the reduced currents.  Zero-padded to kernel block
+    multiples and sliced back, like :func:`aimc_spiking_linear`."""
+    t, b, d_in = spikes.shape
+    d_out = w_levels.shape[1]
+
+    def rup(x, m):
+        return (x + m - 1) // m * m
+
+    bb = rup(b, 8) if b < 128 else rup(b, 128)
+    di = rup(d_in, 128)
+    do = rup(d_out, 128)
+    sp = jnp.pad(spikes, ((0, 0), (0, bb - b), (0, di - d_in)))
+    wp = jnp.pad(w_levels, ((0, di - d_in), (0, do - d_out)))
+    out = aimc_matmul_counts_kernel(
+        sp, wp, block_b=min(bb, 128), block_in=128, block_out=128,
+        interpret=interpret,
     )
     return out[:, :b, :d_out]
 

@@ -117,6 +117,17 @@ def aimc_programmed_linear_ref(
                                    beta=beta, v_thresh=v_thresh)
 
 
+def aimc_counts_ref(spikes: Array, w_levels: Array) -> Array:
+    """[T,B,d_out] f32 integer-valued crossbar counts (pre-scale, pre-LIF).
+
+    The shard-local half of a row-parallel spiking linear: partial counts
+    from one d_in shard, exact under f32 addition (integer-valued), so the
+    cross-shard psum reproduces the single-device accumulation bit-for-bit."""
+    return jnp.einsum(
+        "tbi,io->tbo", spikes.astype(jnp.float32), w_levels.astype(jnp.float32)
+    )
+
+
 def aimc_spiking_linear_ref(
     spikes: Array,  # [T, B, d_in] binary
     w_levels: Array,  # [d_in, d_out] int8

@@ -38,6 +38,49 @@ def make_production_mesh(*, multi_pod: bool = False):
     )
 
 
+def parse_mesh_spec(spec: str) -> Tuple[int, int]:
+    """Parse a ``--mesh`` CLI value into a (data, model) shape.
+
+    Accepts ``"2x4"`` / ``"2,4"`` (explicit shape), a single integer
+    (``"4"`` = data-parallel only), or ``"auto"`` (all visible devices on
+    the data axis)."""
+    import jax
+
+    s = spec.strip().lower()
+    if s in ("auto", ""):
+        return (len(jax.devices()), 1)
+    parts = [p for p in s.replace("x", ",").split(",") if p]
+    dims = tuple(int(p) for p in parts)
+    if len(dims) == 1:
+        return (dims[0], 1)
+    if len(dims) != 2:
+        raise ValueError(
+            f"--mesh wants 'DATAxMODEL' (e.g. 2x4), got {spec!r}")
+    return dims  # type: ignore[return-value]
+
+
+def make_serving_mesh(shape: Tuple[int, int]):
+    """A ``(data, model)`` mesh over the first data*model visible devices.
+
+    The serving mesh of ``repro.distributed``: ``data`` partitions decode
+    slots (data-parallel continuous batching), ``model`` partitions heads /
+    crossbar columns (tensor-parallel spiking kernels).  Use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to emulate an
+    N-device host mesh on CPU."""
+    import jax
+    from jax.sharding import Mesh
+
+    ndev = int(np.prod(shape))
+    have = len(jax.devices())
+    if have < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {have}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={ndev}"
+        )
+    devs = np.array(jax.devices()[:ndev]).reshape(shape)
+    return Mesh(devs, ("data", "model"))
+
+
 def make_test_mesh(shape: Tuple[int, ...] = (1, 1), axes: Optional[Tuple[str, ...]] = None):
     """Tiny mesh (defaults (1,1) data/model) for CPU tests: gives shard_map
     its axis names without needing multiple devices."""

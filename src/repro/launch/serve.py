@@ -4,6 +4,9 @@
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --backend pallas
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --program \\
         --drift-step 60 --recal-every 3600      # PCM lifecycle + energy
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    python -m repro.launch.serve --arch xpikeformer-gpt-4-256 \\
+        --backend pallas --mesh 2x4             # (data, model) mesh serving
 
 Thin CLI over the ``repro.serving`` subsystem: a :class:`~repro.serving.
 BatchScheduler` splices requests into free slots mid-flight (continuous
@@ -13,6 +16,11 @@ pytree, and advances every slot with one jit-compiled batched
 backend (reference / integer / pallas) over spike-train KV caches; all
 other archs use the conventional float KV / recurrent-state path.  Greedy
 sampling.
+
+``--mesh DATAxMODEL`` places the whole stack on a (data, model) mesh via
+:class:`repro.distributed.Executor`: decode slots are data-parallel,
+spiking linears / SSA attention run tensor-parallel over ``model``
+(bit-exact vs single-device on the integer/pallas backends).
 
 ``--program`` programs the spiking-linear weights onto simulated PCM
 (:mod:`repro.aimc_device`) before serving; ``--drift-step`` /
@@ -35,7 +43,7 @@ from repro import aimc_device as AD
 from repro.configs.base import ParallelConfig
 from repro.configs.registry import get_config, reduced_config
 from repro.engine import get_backend
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_serving_mesh, make_test_mesh, parse_mesh_spec
 from repro.models import transformer as T
 from repro.parallel import sharding as SH
 from repro.serving import BatchScheduler
@@ -54,6 +62,7 @@ def serve(
     program: bool = False,
     drift_step_s: float = 0.0,
     recal_every_s: float = 0.0,
+    mesh_spec: str = "",
 ):
     """Serve ``n_requests`` synthetic prompts; returns their outputs in
     submission order (continuous batching: a finished slot is refilled from
@@ -64,9 +73,6 @@ def serve(
     if cfg.spiking and cfg.attention_kind == "ssa":
         print(f"[serve] {arch} decodes through the '{backend}' backend over "
               "spike-train KV caches (SSA serving path)")
-    mesh = make_test_mesh((1, 1))
-    parallel = ParallelConfig(moe_impl="ep_a2a" if cfg.is_moe else "dense")
-    pctx = SH.make_pctx(mesh, parallel)
     params = T.init_params(jax.random.PRNGKey(seed), cfg)
 
     drift = None
@@ -81,10 +87,24 @@ def serve(
               f"(drift {drift_step_s or 'wall-clock'} s/step, "
               f"GDC every {recal_every_s or 'never'} s)")
 
-    sch = BatchScheduler(
-        params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
-        pctx=pctx, moe_impl=parallel.moe_impl, drift=drift,
-    )
+    if mesh_spec:
+        from repro.distributed import Executor
+
+        shape = parse_mesh_spec(mesh_spec)
+        mesh = make_serving_mesh(shape)
+        ex = Executor(params, cfg, get_backend(backend), mesh)
+        sch = ex.scheduler(slots=slots, cache_len=cache_len, drift=drift)
+        print(f"[serve] mesh (data={shape[0]}, model={shape[1]}): "
+              f"slots data-parallel, spiking kernels tensor-parallel "
+              f"(TP {'on' if ex.plan.tp > 1 else 'off'})")
+    else:
+        mesh = make_test_mesh((1, 1))
+        parallel = ParallelConfig(moe_impl="ep_a2a" if cfg.is_moe else "dense")
+        pctx = SH.make_pctx(mesh, parallel)
+        sch = BatchScheduler(
+            params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
+            pctx=pctx, moe_impl=parallel.moe_impl, drift=drift,
+        )
     rng = jax.random.PRNGKey(seed + 1)
     prompts: List[jnp.ndarray] = [
         jax.random.randint(jax.random.fold_in(rng, i), (int(4 + 3 * (i % 4)),), 0,
@@ -121,6 +141,9 @@ def main(argv=None):
     ap.add_argument("--cache-len", type=int, default=64)
     ap.add_argument("--backend", default="reference",
                     choices=["reference", "integer", "pallas"])
+    ap.add_argument("--mesh", default="",
+                    help="serve on a (data, model) mesh, e.g. 2x4 or 4 "
+                         "(data-parallel only); needs data*model devices")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     ap.add_argument("--program", action="store_true", default=False,
                     help="program spiking linears onto simulated PCM first")
@@ -132,7 +155,7 @@ def main(argv=None):
     serve(a.arch, smoke=a.smoke, n_requests=a.requests, slots=a.slots,
           max_new=a.max_new, cache_len=a.cache_len, backend=a.backend,
           program=a.program, drift_step_s=a.drift_step,
-          recal_every_s=a.recal_every)
+          recal_every_s=a.recal_every, mesh_spec=a.mesh)
 
 
 if __name__ == "__main__":

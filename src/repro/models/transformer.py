@@ -221,7 +221,8 @@ def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array, backend) 
     ks = jax.random.split(key, 5)
 
     def proj(w, kk):  # LIF(W s^t): spiking Q/K/V generation (Table I)
-        out = backend.spiking_linear(kk, _lin_operand(w, d, s.dtype), s)
+        out = backend.spiking_linear(kk, _lin_operand(w, d, s.dtype), s,
+                                     part="col")
         return out.reshape(T, b, n, -1, hd)
 
     q = proj(params["wq"], ks[0])  # [T,B,S,H,hd]
@@ -243,14 +244,16 @@ def _spiking_attention(params, s: Array, cfg: ModelConfig, key: Array, backend) 
     a = jnp.moveaxis(a.reshape(T, b, h, n, hd), 2, 3).reshape(T, b, n, h * hd)
     # LIF on the output projection (spiking neuron tile semantics)
     return backend.spiking_linear(
-        ks[4], _lin_operand(params["wo"], h * hd, s.dtype), a)
+        ks[4], _lin_operand(params["wo"], h * hd, s.dtype), a, part="row")
 
 
 def _spiking_mlp(params, s: Array, cfg: ModelConfig, key: Array, backend) -> Array:
     """LIF(W2 LIF(W1 s^t)) — Table I feed-forward row."""
     k1, k2 = jax.random.split(key)
-    h = backend.spiking_linear(k1, _lin_operand(params["wi"], s.shape[-1], s.dtype), s)
-    return backend.spiking_linear(k2, _lin_operand(params["wo"], h.shape[-1], s.dtype), h)
+    h = backend.spiking_linear(k1, _lin_operand(params["wi"], s.shape[-1], s.dtype), s,
+                               part="col")
+    return backend.spiking_linear(k2, _lin_operand(params["wo"], h.shape[-1], s.dtype), h,
+                                  part="row")
 
 
 def _apply_block_spiking(
@@ -568,7 +571,7 @@ def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
     h, hd, kv = cfg.num_heads, cfg.resolved_head_dim, cfg.num_kv_heads
 
     def proj(w):  # LIF(W s^t) -> [T,B,heads,hd]
-        out = backend.spiking_linear(None, _lin_operand(w, d), s)
+        out = backend.spiking_linear(None, _lin_operand(w, d), s, part="col")
         return out.reshape(t, b, -1, hd)
 
     q = proj(params["wq"])  # [T,B,H,hd]
@@ -591,7 +594,8 @@ def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
     a = backend.ssa_attention_decode(slot_keys, q[:, :, :, None, :], kf, vf,
                                      i_max=lcap)
     a = a.reshape(t, b, 1, h * hd).astype(s.dtype)
-    out = backend.spiking_linear(None, _lin_operand(params["wo"], h * hd), a)
+    out = backend.spiking_linear(None, _lin_operand(params["wo"], h * hd), a,
+                                 part="row")
     return out, {"sk": sk, "sv": sv, "pos": pos + 1}
 
 
@@ -622,10 +626,11 @@ def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
             s = s + _slot_rate_encode(keys_for(200003), ym, s.shape[0])
         else:
             h1 = backend.spiking_linear(
-                None, _lin_operand(params["mlp"]["wi"], s.shape[-1]), s)
+                None, _lin_operand(params["mlp"]["wi"], s.shape[-1]), s,
+                part="col")
             s = s + backend.spiking_linear(
                 None, _lin_operand(params["mlp"]["wo"], h1.shape[-1]),
-                h1.astype(s.dtype)).astype(s.dtype)
+                h1.astype(s.dtype), part="row").astype(s.dtype)
     return s, cache
 
 

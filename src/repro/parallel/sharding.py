@@ -174,13 +174,17 @@ def cache_pspecs(cfg, mesh: Optional[Mesh], batch: int, seq_len: int):
         if mixer in ("attn", "local"):
             if T._spiking_decode_enabled(cfg):
                 # spiking KV trains [B, spike_T, L, KV, hd]: batch over
-                # (pod, data); the cache axis stays replicated — the SSA
-                # comparators reduce over all of L every step and the
-                # per-slot scatter would cross shards
+                # (pod, data) and *KV heads over model* (each SSA engine
+                # core caches its own heads' trains — tensor-parallel
+                # decode, see repro.distributed).  The cache-length axis
+                # stays replicated: the SSA comparators reduce over all of
+                # L every step and the per-slot scatter would cross shards.
+                kv = "model" if ("model" in sizes
+                                 and cfg.num_kv_heads % sizes["model"] == 0) else None
                 return {
-                    "sk": P(b, None, None, None, None),
-                    "sv": P(b, None, None, None, None),
-                    "pos": P(),
+                    "sk": P(b, None, None, kv, None),
+                    "sv": P(b, None, None, kv, None),
+                    "pos": P(b),
                 }
             L = min(cfg.window_size, seq_len) if mixer == "local" else seq_len
             s = "model" if ("model" in sizes and L % sizes["model"] == 0) else None

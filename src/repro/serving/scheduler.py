@@ -63,6 +63,8 @@ class Request:
 @dataclasses.dataclass
 class ServeStats:
     requests: int = 0
+    data_shards: int = 1  # mesh data-axis size (1 = single device)
+    model_shards: int = 1  # mesh model-axis size
     decode_steps: int = 0
     decoded_tokens: int = 0
     prefill_tokens: int = 0
@@ -115,7 +117,11 @@ class BatchScheduler:
         pctx: Optional[ParallelCtx] = None,
         moe_impl: Optional[str] = None,
         drift: Optional[AD.DriftPolicy] = None,
+        placement=None,
     ):
+        self.placement = placement  # repro.distributed.Executor | None
+        if placement is not None:
+            params = placement.place_params(params)
         self.params = params
         self.cfg = cfg
         self.backend = backend
@@ -124,9 +130,27 @@ class BatchScheduler:
         self.pctx = pctx or ParallelCtx()
         self.moe_impl = moe_impl or ("ep_a2a" if cfg.is_moe else "dense")
         self.drift = drift
-        self.state = ST.init_state(cfg, slots, cache_len)
-        self._decode = ST.make_decode_fn(cfg, self.pctx, backend, self.moe_impl)
-        self._prefill = ST.make_prefill_fn(cfg, self.pctx, backend, self.moe_impl)
+        self.state = self._place_state(ST.init_state(cfg, slots, cache_len))
+        if placement is None:
+            decode_out = prefill_out = None
+            prefill_backend = backend
+            self._splice = ST.splice_request_jit
+            self._release = ST.release_slot_jit
+        else:
+            # mesh serving: slots ride the data axis, spiking kernels are
+            # tensor-parallel over model; out-shardings are pinned so the
+            # compiled decode feeds itself without resharding/recompiling
+            decode_out = placement.decode_out_shardings(slots, cache_len)
+            prefill_out = placement.replicated
+            prefill_backend = placement.prefill_backend
+            state_sh = placement.state_shardings(slots, cache_len)
+            self._splice = jax.jit(ST.splice_request, out_shardings=state_sh)
+            self._release = jax.jit(ST.release_slot, out_shardings=state_sh)
+        self._decode = ST.make_decode_fn(cfg, self.pctx, backend, self.moe_impl,
+                                         out_shardings=decode_out)
+        self._prefill = ST.make_prefill_fn(cfg, self.pctx, prefill_backend,
+                                           self.moe_impl,
+                                           out_shardings=prefill_out)
         self._queue: Deque[Request] = deque()
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._remaining: List[int] = [0] * slots
@@ -134,7 +158,7 @@ class BatchScheduler:
         # per-request measured energy / spike events (rid -> totals)
         self.request_energy_j: Dict[int, float] = {}
         self.request_spikes: Dict[int, float] = {}
-        self.stats = ServeStats()
+        self.stats = self._fresh_stats()
         self._next_rid = 0
         # PCM device clock (drift lifecycle): picks up wherever the
         # programmed params already are — the device does not rejuvenate
@@ -153,10 +177,22 @@ class BatchScheduler:
             self._e_token_pj = 0.0
         self._e_event_pj = EM.decode_synapse_energy_pj()
 
+    def _fresh_stats(self) -> ServeStats:
+        if self.placement is None:
+            return ServeStats()
+        return ServeStats(data_shards=self.placement.data,
+                          model_shards=self.placement.model)
+
+    def _place_state(self, state):
+        return state if self.placement is None else self.placement.place_state(state)
+
+    def _place_params(self, params):
+        return params if self.placement is None else self.placement.place_params(params)
+
     def set_params(self, params: Any) -> None:
         """Swap the served params (e.g. a newly-programmed tree) and re-read
         the device lifecycle bookkeeping from them."""
-        self.params = params
+        self.params = self._place_params(params)
         self._programmed = AD.has_device_state(params)
         self._t_device = AD.device_time(params)
         self._last_recal = self._t_device
@@ -167,14 +203,15 @@ class BatchScheduler:
         """Drop all requests and state but keep the compiled step functions
         (fresh server, warm jit cache — used by benchmarks and tests).
         The PCM device clock is *not* reset: drift is physical."""
-        self.state = ST.init_state(self.cfg, self.slots, self.cache_len)
+        self.state = self._place_state(
+            ST.init_state(self.cfg, self.slots, self.cache_len))
         self._queue.clear()
         self._slot_req = [None] * self.slots
         self._remaining = [0] * self.slots
         self.outputs = {}
         self.request_energy_j = {}
         self.request_spikes = {}
-        self.stats = ServeStats()
+        self.stats = self._fresh_stats()
         self.stats.t_device_s = self._t_device
 
     # -- request intake ------------------------------------------------
@@ -221,7 +258,7 @@ class BatchScheduler:
                 self.params, prompt_pad, jnp.int32(n_ctx),
                 jnp.uint32(req.seed), cache1,
             )
-            self.state = ST.splice_request_jit(
+            self.state = self._splice(
                 self.state, slot, cache1, p[-1], jnp.uint32(req.seed))
             self._slot_req[slot] = req
             self._remaining[slot] = req.max_new
@@ -253,7 +290,7 @@ class BatchScheduler:
             self.outputs.pop(req.rid, None)
         self._slot_req[slot] = None
         self._remaining[slot] = 0
-        self.state = ST.release_slot_jit(self.state, slot)
+        self.state = self._release(self.state, slot)
         self.stats.evictions += 1
 
     # -- serving loop --------------------------------------------------
@@ -327,11 +364,12 @@ class BatchScheduler:
         due_image = self._t_device >= max(self._t_image,
                                           pol.cfg.drift_t0_s) * ratio
         if due_recal or due_image:
-            self.params = AD.drift_tree_jit(
-                self.params, jnp.float32(self._t_device), pol.cfg)
+            self.params = self._place_params(AD.drift_tree_jit(
+                self.params, jnp.float32(self._t_device), pol.cfg))
             self._t_image = self._t_device
         if due_recal:
-            self.params = AD.recalibrate_tree_jit(self.params, pol.cfg)
+            self.params = self._place_params(
+                AD.recalibrate_tree_jit(self.params, pol.cfg))
             self._last_recal = self._t_device
             self.stats.recalibrations += 1
         self.stats.t_device_s = self._t_device

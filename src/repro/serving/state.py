@@ -136,7 +136,8 @@ def release_slot(state: DecodeState, slot) -> DecodeState:
 # ---------------------------------------------------------------------------
 
 
-def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
+def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
+                   out_shardings=None):
     """The single jit-compiled batched decode step over the whole batch.
 
     ``(params, state) -> (logits [slots,1,V], state', activity [slots])`` —
@@ -148,6 +149,11 @@ def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
     per-request energy.  ``params`` may hold programmed
     ``AIMCDeviceState`` leaves; the drift lifecycle only rewrites leaf
     *values*, so one compile serves the server's whole lifetime.
+
+    ``out_shardings`` (mesh serving — ``repro.distributed``) pins the
+    (logits, state, activity) placements so the output state always
+    matches the input state's sharding: the compiled step feeds itself
+    without resharding or recompiling.
     """
 
     def step(params, state: DecodeState):
@@ -159,10 +165,13 @@ def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
         return logits, dataclasses.replace(state, cache=cache, tokens=nxt), act
 
-    return jax.jit(step)
+    if out_shardings is None:
+        return jax.jit(step)
+    return jax.jit(step, out_shardings=out_shardings)
 
 
-def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
+def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
+                    out_shardings=None):
     """Batch-1 prompt prefill through the *same* decode path as serving.
 
     ``(params, prompt [P], length, seed, cache1) -> (cache1', activity)`` —
@@ -195,7 +204,11 @@ def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str):
             (prompt, jnp.arange(prompt.shape[0])))
         return cache1, act
 
-    return jax.jit(prefill)
+    if out_shardings is None:
+        return jax.jit(prefill)
+    # mesh serving: the batch-1 prefill result is replicated (splice
+    # scatters it into the data-sharded batch afterwards)
+    return jax.jit(prefill, out_shardings=out_shardings)
 
 
 splice_request_jit = jax.jit(splice_request)

@@ -3,6 +3,16 @@ import os
 import sys
 import types
 
+# Force an 8-device host platform (before the jax import below initialises
+# the backend) so the distributed-execution tests (tests/test_distributed.py)
+# exercise a real (data, model) mesh in tier-1.  Measured overhead on the
+# rest of the suite is nil — single-device computations still run on device
+# 0.  An explicit device-count in the caller's XLA_FLAGS wins.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
 import jax
 import pytest
 
