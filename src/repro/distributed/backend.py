@@ -192,6 +192,36 @@ class ShardedBackend:
             out_specs=kv_spec,
         )(slot_keys, q, k, v)
 
+    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
+                                   page_table, *, i_max,
+                                   h0: Union[int, Array] = 0):
+        """Head-parallel paged SSA decode: each shard gathers its own KV
+        heads' pages through the (replicated) page table and draws the
+        single-device oracle's comparator integers for its global heads —
+        the paged mirror of :meth:`ssa_attention_decode`.  The page axis of
+        the pool is never sharded (pages are global), only the KV-head axis
+        rides ``model``; slots ride ``data``."""
+        h = q.shape[2]
+        if self.model_axis is None or not self.plan.heads or h % self.plan.tp:
+            return self.inner.ssa_attention_decode_paged(
+                slot_keys, q, kpool, vpool, page_table, i_max=i_max, h0=h0)
+        axis = self.model_axis
+        h_local = h // self.plan.tp
+        b = self._batch(q.shape[1])
+        q_spec = P(None, b, axis, None, None)
+        pool_spec = P(None, None, axis, None, None)  # [P, T, KV, page_len, d]
+
+        def body(sk, qb, kb, vb, tb):
+            off = jnp.asarray(h0) + lax.axis_index(axis) * h_local
+            return self.inner.ssa_attention_decode_paged(
+                sk, qb, kb, vb, tb, i_max=i_max, h0=off)
+
+        return _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(b), q_spec, pool_spec, pool_spec, P(b, None)),
+            out_specs=q_spec,
+        )(slot_keys, q, kpool, vpool, page_table)
+
     # -- tensor-parallel spiking linear --------------------------------
 
     def spiking_linear(self, key, p, spikes, sim=None, *, part=None):

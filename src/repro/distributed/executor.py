@@ -198,8 +198,40 @@ class Executor:
     def state_shardings(self, slots: int, cache_len: int):
         return SH.to_shardings(self.state_specs(slots, cache_len), self.mesh)
 
+    def paged_state_specs(self, slots: int, cache_len: int, n_pages: int,
+                          page_len: int):
+        """PagedDecodeState PartitionSpecs: pool pages are *global* (the
+        page axis never shards — any slot on any data shard may reference
+        any page), the pool's KV-head axis rides ``model`` (each SSA core
+        caches its own heads' spike pages, exactly like the dense cache),
+        and the per-slot vectors/table ride ``data``."""
+        from repro.serving.state import PagedDecodeState
+
+        sizes = SH.axis_sizes(self.mesh)
+        kv = "model" if ("model" in sizes
+                         and self.cfg.num_kv_heads % sizes["model"] == 0) else None
+        b = SH.batch_pspec(self.mesh, slots)
+        leaf = P(None, None, kv, None, None)  # [P, T, KV, page_len, hd]
+        pool = jax.tree.map(
+            lambda s: P(None, *leaf) if len(s.shape) == 6 else leaf,
+            T.paged_pool_schema(self.cfg, n_pages, page_len))
+        return PagedDecodeState(pool=pool, page_table=P(b, None), pos=P(b),
+                                tokens=P(b), seeds=P(b), active=P(b))
+
+    def paged_state_shardings(self, slots: int, cache_len: int, n_pages: int,
+                              page_len: int):
+        return SH.to_shardings(
+            self.paged_state_specs(slots, cache_len, n_pages, page_len),
+            self.mesh)
+
     def place_state(self, state):
+        from repro.serving.state import PagedDecodeState
+
         slots = state.tokens.shape[0]
+        if isinstance(state, PagedDecodeState):
+            mp = state.page_table.shape[1]
+            return jax.device_put(state, self.paged_state_shardings(
+                slots, mp * state.page_len, state.n_pages, state.page_len))
         cache_len = _cache_len(state.cache)
         return jax.device_put(state, self.state_shardings(slots, cache_len))
 
@@ -210,6 +242,14 @@ class Executor:
         b = SH.batch_pspec(self.mesh, slots)
         return (self._ns(P(b, None, None)),
                 self.state_shardings(slots, cache_len),
+                self._ns(P(b)))
+
+    def paged_decode_out_shardings(self, slots: int, cache_len: int,
+                                   n_pages: int, page_len: int):
+        """(logits, paged state, activity) shardings for the paged step."""
+        b = SH.batch_pspec(self.mesh, slots)
+        return (self._ns(P(b, None, None)),
+                self.paged_state_shardings(slots, cache_len, n_pages, page_len),
                 self._ns(P(b)))
 
     # -- mesh-wide forward ---------------------------------------------
@@ -240,15 +280,19 @@ class Executor:
 
     # -- data-parallel continuous batching ------------------------------
 
-    def scheduler(self, *, slots: int = 4, cache_len: int = 64, drift=None):
+    def scheduler(self, *, slots: int = 4, cache_len: int = 64, drift=None,
+                  paged: bool = False, page_len: int = 8,
+                  n_pages: Optional[int] = None):
         """A mesh-sharded :class:`repro.serving.BatchScheduler`: slots are
         data-parallel, the decode math is tensor-parallel, admission /
-        eviction / energy metering work exactly as on one device.
-        Schedulers are cached per (slots, cache_len) to keep the compiled
-        decode/prefill warm across :meth:`serve` calls."""
+        eviction / energy metering work exactly as on one device
+        (``paged=True`` serves off the block-paged pool, KV heads sharded
+        over ``model``, pages global).  Schedulers are cached per (slots,
+        cache_len, paged geometry) to keep the compiled decode/prefill
+        warm across :meth:`serve` calls."""
         from repro.serving import BatchScheduler
 
-        key = (slots, cache_len)
+        key = (slots, cache_len, paged) + ((page_len, n_pages) if paged else ())
         sch = self._schedulers.get(key)
         if sch is not None:
             sch.reset()
@@ -258,15 +302,19 @@ class Executor:
         sch = BatchScheduler(
             self.params, self.cfg, self.decode_backend, slots=slots,
             cache_len=cache_len, pctx=self.pctx, moe_impl=self.moe_impl,
-            drift=drift, placement=self,
+            drift=drift, placement=self, paged=paged, page_len=page_len,
+            n_pages=n_pages,
         )
         self._schedulers[key] = sch
         return sch
 
     def serve(self, prompts, max_new: int = 16, *, slots: int = 4,
-              cache_len: int = 64, seed: int = 0, drift=None):
+              cache_len: int = 64, seed: int = 0, drift=None,
+              paged: bool = False, page_len: int = 8,
+              n_pages: Optional[int] = None):
         """Continuous-batching serve on the mesh -> (outputs, ServeStats)."""
-        sch = self.scheduler(slots=slots, cache_len=cache_len, drift=drift)
+        sch = self.scheduler(slots=slots, cache_len=cache_len, drift=drift,
+                             paged=paged, page_len=page_len, n_pages=n_pages)
         rids = [sch.submit(p, max_new, seed=seed + i)
                 for i, p in enumerate(prompts)]
         outs = sch.run()

@@ -108,6 +108,25 @@ class Backend(Protocol):
         those heads (see :class:`repro.distributed.ShardedBackend`)."""
         ...
 
+    def ssa_attention_decode_paged(self, slot_keys: Array, q: Array,
+                                   kpool: Array, vpool: Array,
+                                   page_table: Array, *, i_max: int,
+                                   h0: Union[int, Array] = 0) -> Array:
+        """One-query SSA decode against a *block-paged* KV spike pool.
+
+        The paged-serving counterpart of :meth:`ssa_attention_decode`:
+        ``kpool``/``vpool [P, T, KV, page_len, d]`` are global physical
+        page pools shared by every slot, and ``page_table [B, MP]`` maps
+        slot ``b``'s logical block ``j`` to a physical page (entry 0 is
+        the permanently-zero null page — unallocated blocks read as zero
+        spikes and mask themselves out of the comparators).  GQA repeat
+        happens inside the backend (pools carry KV heads).  The comparator
+        PRNs are drawn at the *logical* geometry ``L = MP * page_len``
+        with the same per-(slot, pos, global head) streams as the dense
+        method, so for identical logical cache content paged and dense
+        decode are bit-identical on the bit-exact substrates."""
+        ...
+
     def lif(self, currents: Array, *, beta: float = 0.5,
             v_thresh: float = 1.0) -> Array:
         """LIF neuron over a ``[T, ...]`` current sequence."""
@@ -157,6 +176,22 @@ def _levels_scale(p: Dict[str, Any], sim: AIMCSim):
         return hw["levels"].astype(jnp.int8), hw["scale"]
     levels, scale = AD.quantize_weights(p["w"], sim.cfg)
     return levels.astype(jnp.int8), scale
+
+
+def _gather_paged_kv(q: Array, kpool: Array, vpool: Array, page_table: Array):
+    """Dense [T,B,H,L,d] K/V views of a paged pool (GQA-repeated to match q).
+
+    The non-kernel backends' paged-decode path: gather each slot's pages
+    through its table (null pages read as zeros) and hand the dense view to
+    the slot-dense decode — bit-identical content, identical PRN streams."""
+    h, kv = q.shape[2], kpool.shape[2]
+    k = KOPS.gather_kv_pages(kpool, page_table)  # [T, B, KV, L, d]
+    v = KOPS.gather_kv_pages(vpool, page_table)
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return k, v
 
 
 def _flatten_time(spikes: Array):
@@ -215,6 +250,11 @@ class ReferenceBackend:
         return jax.vmap(per_slot, in_axes=(0, 1, 1, 1), out_axes=1)(
             slot_keys, q, k, v
         )
+
+    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
+                                   page_table, *, i_max, h0=0):
+        k, v = _gather_paged_kv(q, kpool, vpool, page_table)
+        return self.ssa_attention_decode(slot_keys, q, k, v, i_max=i_max, h0=h0)
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         return SP.lif(currents, SP.LIFParams(beta=beta, v_thresh=v_thresh))
@@ -287,6 +327,18 @@ class IntegerBackend:
         )
         return jnp.moveaxis(out.reshape(b, t, h, 1, d), 0, 1)
 
+    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
+                                   page_table, *, i_max, h0=0):
+        t, b, h, n1, d = q.shape
+        l = page_table.shape[1] * kpool.shape[3]
+        # identical streams to the dense method (bit-exactness across modes)
+        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d, i_max, h0)
+        out = KREF.ssa_decode_paged_ref(
+            jnp.moveaxis(q, 1, 0), kpool, vpool, page_table,
+            rs.reshape(b, t, h, 1, l), ra.reshape(b, t, h, 1, d),
+        )
+        return jnp.moveaxis(out, 0, 1)
+
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         t = currents.shape[0]
         flat = currents.astype(jnp.float32).reshape(t, -1)
@@ -334,6 +386,13 @@ class PallasBackend:
     def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
         return KOPS.ssa_attention_decode_packed(
             q, k, v, slot_keys, h0, i_max=i_max, interpret=self.interpret
+        )
+
+    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
+                                   page_table, *, i_max, h0=0):
+        return KOPS.ssa_attention_decode_paged_packed(
+            q, kpool, vpool, page_table, slot_keys, h0, i_max=i_max,
+            interpret=self.interpret,
         )
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
@@ -407,6 +466,35 @@ class MeteringBackend:
         qs, ks, vs = self._count(q), self._count(k), self._count(v)
         e = EM.meter_ssa(t, b * h, n, l, d, qs / q.size, ks / k.size,
                          vs / v.size)
+        self.report.ssa_pj += e["ssa"]
+        self.report.spikes_in += qs + ks + vs
+        self.report.spikes_out += self._count(out)
+        self.report.calls += 1
+        return out
+
+    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
+                                   page_table, *, i_max, h0=0):
+        from repro.energy import model as EM
+
+        out = self.inner.ssa_attention_decode_paged(
+            slot_keys, q, kpool, vpool, page_table, i_max=i_max, h0=h0)
+        t, b, h, n, d = q.shape
+        mp, kv = page_table.shape[1], kpool.shape[2]
+        pl_ = kpool.shape[3]
+        l = mp * pl_
+        rep = h // kv
+        # meter the *logical* gathered K/V the tile streams, without ever
+        # materialising it: per-page spike totals indexed through the page
+        # table give the gathered count at O(pool) cost, and the GQA
+        # repeat is a plain multiplier on count and size alike
+        kc = jnp.sum(kpool.astype(jnp.float32), axis=(1, 2, 3, 4))  # [P]
+        vc = jnp.sum(vpool.astype(jnp.float32), axis=(1, 2, 3, 4))
+        qs = self._count(q)
+        ks = rep * float(jnp.sum(kc[page_table]))
+        vs = rep * float(jnp.sum(vc[page_table]))
+        kv_size = b * t * rep * kv * l * d  # the dense gathered view's size
+        e = EM.meter_ssa(t, b * h, n, l, d, qs / q.size, ks / kv_size,
+                         vs / kv_size)
         self.report.ssa_pj += e["ssa"]
         self.report.spikes_in += qs + ks + vs
         self.report.spikes_out += self._count(out)
@@ -692,13 +780,19 @@ class XpikeformerEngine:
         pctx: Any = None,
         moe_impl: Optional[str] = None,
         drift: Any = None,
+        paged: bool = False,
+        page_len: int = 8,
+        n_pages: Optional[int] = None,
     ):
         """A :class:`repro.serving.BatchScheduler` over this engine.
 
         The scheduler's batched ``decode_step`` runs through this engine's
         backend, so reference / integer / pallas serve identically (the
-        integer oracle is the bit-exactness contract).  Schedulers are
-        cached per (slots, cache_len, moe_impl) and reset on reuse, so
+        integer oracle is the bit-exactness contract).  ``paged=True``
+        serves spiking SSA configs off the block-paged spike-train KV
+        cache (exact prefix sharing + chunked prefill) — bit-identical
+        tokens to dense serving.  Schedulers are cached per (slots,
+        cache_len, moe_impl, paged geometry) and reset on reuse, so
         repeated :meth:`serve`/:meth:`generate` calls keep the compiled
         decode/prefill functions warm."""
         from repro.serving import BatchScheduler
@@ -706,7 +800,8 @@ class XpikeformerEngine:
         assert self.task == "lm", "serving drives the generic LM stack (task='lm')"
         params = self.params if params is None else params
         assert params is not None, "call init() first or pass params"
-        key = (slots, cache_len, moe_impl)
+        key = (slots, cache_len, moe_impl, paged) + (
+            (page_len, n_pages) if paged else ())
         sch = self._schedulers.get(key) if pctx is None else None
         if sch is not None:
             sch.reset()
@@ -715,7 +810,8 @@ class XpikeformerEngine:
             return sch
         sch = BatchScheduler(
             params, self.cfg, self.backend, slots=slots, cache_len=cache_len,
-            pctx=pctx, moe_impl=moe_impl, drift=drift,
+            pctx=pctx, moe_impl=moe_impl, drift=drift, paged=paged,
+            page_len=page_len, n_pages=n_pages,
         )
         if pctx is None:
             self._schedulers[key] = sch
@@ -733,6 +829,9 @@ class XpikeformerEngine:
         pctx: Any = None,
         moe_impl: Optional[str] = None,
         drift: Any = None,
+        paged: bool = False,
+        page_len: int = 8,
+        n_pages: Optional[int] = None,
     ):
         """Continuous-batching serve: prompts -> (outputs, ServeStats).
 
@@ -741,9 +840,11 @@ class XpikeformerEngine:
         :class:`repro.aimc_device.DriftPolicy` as ``drift`` (with
         programmed params) to run the PCM drift/recalibration lifecycle;
         per-request energy lands in the scheduler's ``request_energy_j``
-        and the returned stats."""
+        and the returned stats.  ``paged=True`` serves off the block-paged
+        spike-train KV cache with exact prefix reuse and chunked prefill."""
         sch = self.scheduler(slots=slots, cache_len=cache_len, params=params,
-                             pctx=pctx, moe_impl=moe_impl, drift=drift)
+                             pctx=pctx, moe_impl=moe_impl, drift=drift,
+                             paged=paged, page_len=page_len, n_pages=n_pages)
         rids = [sch.submit(p, max_new, seed=seed + i) for i, p in enumerate(prompts)]
         outs = sch.run()
         if params is None and sch._programmed:

@@ -50,13 +50,29 @@ def _kernel(s_ref, w_ref, scale_ref, bias_ref, out_ref, acc_ref, *, t_steps: int
     def _fire():
         scale = scale_ref[...].astype(jnp.float32)  # [bout]
         bias = bias_ref[...].astype(jnp.float32)  # [bout], digital per-column
-        v = jnp.zeros(acc_ref.shape[1:], jnp.float32)
+        # mirror the oracle's rounding structure exactly (see
+        # kernels/ref.py "Float-rounding discipline"): first COMMIT the
+        # scaled pre-activations — the store to the VMEM scratch is a
+        # materialisation, i.e. one f32 rounding of counts*scale+bias,
+        # matching the oracle's pre array — then run the membrane through
+        # a loop CARRY (one committed rounding per step, like lax.scan).
+        # A fully unrolled chain would let the backend keep the whole
+        # T-step recursion at wider precision and flip comparators whose
+        # membrane sits within one ulp of v_thresh (found by the
+        # property-based differential suite).
         for t in range(t_steps):
-            # parenthesised to match the ref oracle's summation order exactly
-            v = beta * v + (acc_ref[t] * scale[None, :] + bias[None, :])
+            acc_ref[t] = acc_ref[t] * scale[None, :] + bias[None, :]
+
+        def step(t, v):
+            pre = pl.load(acc_ref, (pl.ds(t, 1), slice(None), slice(None)))[0]
+            v = beta * v + pre
             spike = (v >= v_thresh).astype(jnp.float32)
-            v = v * (1.0 - spike)
-            out_ref[t] = spike.astype(out_ref.dtype)
+            pl.store(out_ref, (pl.ds(t, 1), slice(None), slice(None)),
+                     spike.astype(out_ref.dtype)[None])
+            return v * (1.0 - spike)
+
+        jax.lax.fori_loop(0, t_steps, step,
+                          jnp.zeros(acc_ref.shape[1:], jnp.float32))
 
 
 def _counts_kernel(s_ref, w_ref, out_ref, acc_ref, *, t_steps: int,

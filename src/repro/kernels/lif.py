@@ -22,12 +22,21 @@ Array = jax.Array
 
 
 def _lif_kernel(cur_ref, out_ref, *, t_steps: int, beta: float, v_thresh: float):
-    v = jnp.zeros(cur_ref.shape[1:], jnp.float32)
-    for t in range(t_steps):  # static unroll: T is 4..16
-        v = beta * v + cur_ref[t].astype(jnp.float32)
+    # loop-carried membrane: the fori_loop carry commits one f32 rounding
+    # per step, exactly like the oracle's lax.scan — a static unroll would
+    # let the backend evaluate the whole T-step mul/add chain at wider
+    # precision and flip threshold-straddling comparators vs lif_ref (see
+    # kernels/ref.py "Float-rounding discipline")
+    def step(t, v):
+        cur = pl.load(cur_ref, (pl.ds(t, 1), slice(None)))[0].astype(jnp.float32)
+        v = beta * v + cur
         spike = (v >= v_thresh).astype(jnp.float32)
-        v = v * (1.0 - spike)
-        out_ref[t] = spike.astype(out_ref.dtype)
+        pl.store(out_ref, (pl.ds(t, 1), slice(None)),
+                 spike.astype(out_ref.dtype)[None])
+        return v * (1.0 - spike)
+
+    jax.lax.fori_loop(0, t_steps, step,
+                      jnp.zeros(cur_ref.shape[1:], jnp.float32))
 
 
 def lif_kernel(

@@ -21,7 +21,9 @@ from repro.kernels.aimc_matmul import (aimc_matmul_counts_kernel,
                                        aimc_spiking_linear_kernel,
                                        drift_requantize_kernel)
 from repro.kernels.lif import lif_kernel
-from repro.kernels.ssa_attention import ssa_attention_kernel, ssa_decode_kernel
+from repro.kernels.ssa_attention import (ssa_attention_kernel,
+                                         ssa_decode_kernel,
+                                         ssa_decode_paged_kernel)
 
 Array = jax.Array
 
@@ -187,6 +189,77 @@ def ssa_attention_decode_packed(
     out = ssa_decode_kernel(qp, kp, vp, rs, ra, interpret=interpret)
     out = out[:, :, :d].reshape(b, t, h, 1, d)
     return jnp.moveaxis(out, 0, 1)
+
+
+def gather_kv_pages(pool: Array, page_table: Array) -> Array:
+    """Paged pool -> dense per-slot KV view (the non-kernel backends' path).
+
+    ``pool [P, T, KV, page_len, d]`` + ``page_table [B, MP]`` -> ``[T, B,
+    KV, MP*page_len, d]``: page ``table[b, j]`` lands at logical positions
+    ``[j*page_len, (j+1)*page_len)`` of slot ``b``.  Table entry 0 is the
+    permanently-zero null page, so unallocated blocks read as zero spikes
+    (comparator-masked for free)."""
+    g = pool[page_table]  # [B, MP, T, KV, page_len, d]
+    g = jnp.moveaxis(g, 2, 0)  # [T, B, MP, KV, page_len, d]
+    g = jnp.swapaxes(g, 2, 3)  # [T, B, KV, MP, page_len, d]
+    return g.reshape(g.shape[:3] + (-1, g.shape[-1]))
+
+
+@partial(jax.jit, static_argnames=("i_max", "interpret"))
+def ssa_attention_decode_paged_packed(
+    q: Array,  # [T, B, H, 1, D] binary — the new tokens' query spikes
+    kpool: Array,  # [P, T, KV, page_len, D] key spike page pool
+    vpool: Array,  # [P, T, KV, page_len, D] value spike page pool
+    page_table: Array,  # [B, MP] int32 page ids (0 = null page)
+    slot_keys: Array,  # [B, 2] uint32 per-slot PRNG keys
+    h0: Union[int, Array] = 0,  # global index of q's first head (TP shards)
+    *,
+    i_max: int,
+    interpret: bool = True,
+) -> Array:
+    """Bit-packed *paged* SSA decode step; returns uint8 spikes [T,B,H,1,D].
+
+    The block-paged serving entry point: K/V spike trains live in a global
+    physical page pool and each slot addresses its blocks through a page
+    table, which the kernel dereferences via scalar-prefetch index maps —
+    no dense per-slot cache is ever materialised in the kernel's address
+    stream.  The comparator PRNs are drawn per (slot, global head) at the
+    *logical* cache geometry ``L = MP * page_len`` with the same
+    ``f(seed, pos, head)`` streams as the dense path, so paged decode is
+    bit-identical to :func:`ssa_attention_decode_packed` over the
+    materialised cache (and to the integer oracle
+    :func:`repro.kernels.ref.ssa_decode_paged_ref`).  In-page position and
+    spike-lane padding to 32-lane multiples is zero-filled: padded
+    positions pair zero K spikes with zero comparator draws, and ``0 > 0``
+    never fires, so they contribute nothing.  GQA repeats KV heads inside
+    the kernel's index maps instead of materialising repeated pools."""
+    t, b, h, n1, d = q.shape
+    pl_ = kpool.shape[3]
+    mp = page_table.shape[1]
+    l = mp * pl_
+    rs, ra = draw_slot_decode_prns(slot_keys, t, h, l, d, i_max, h0)
+    # pad the in-page position axis and the spike-lane axis to 32-multiples
+    p_pad = (-pl_) % 32
+    d_pad = (-d) % 32
+    plp, dp = pl_ + p_pad, d + d_pad
+    qf = jnp.moveaxis(q, 1, 0).reshape(b, t, h, 1, d).astype(jnp.uint8)
+    kf = kpool.astype(jnp.uint8)
+    vf = vpool.astype(jnp.uint8)
+    rs = rs.reshape(b, t, h, 1, mp, pl_)
+    ra = ra.reshape(b, t, h, 1, d)
+    if p_pad or d_pad:
+        qf = jnp.pad(qf, ((0, 0),) * 4 + ((0, d_pad),))
+        kf = jnp.pad(kf, ((0, 0),) * 3 + ((0, p_pad), (0, d_pad)))
+        vf = jnp.pad(vf, ((0, 0),) * 3 + ((0, p_pad), (0, d_pad)))
+        rs = jnp.pad(rs, ((0, 0),) * 5 + ((0, p_pad),))
+        ra = jnp.pad(ra, ((0, 0),) * 4 + ((0, d_pad),))
+    rs = rs.reshape(b, t, h, 1, mp * plp)
+    qp = pack_bits(qf, axis=-1)  # [B, T, H, 1, Wd]
+    kp = pack_bits(kf, axis=-1)  # [P, T, KV, PLp, Wd]
+    vp = pack_bits(vf, axis=-2)  # [P, T, KV, Wp, Dp]
+    out = ssa_decode_paged_kernel(
+        page_table.astype(jnp.int32), qp, kp, vp, rs, ra, interpret=interpret)
+    return jnp.moveaxis(out[..., :d], 0, 1)  # [T, B, H, 1, D]
 
 
 @partial(jax.jit, static_argnames=("beta", "v_thresh", "interpret"))

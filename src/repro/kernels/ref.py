@@ -13,6 +13,26 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+# Float-rounding discipline for the LIF membrane contract
+# --------------------------------------------------------
+# The bit-exactness contract needs kernel and oracle to take *exactly* the
+# same f32 roundings.  XLA only commits a rounding at materialisation
+# points (buffer stores, loop carries) — inside a fused elementwise chain
+# it may evaluate mul+add sequences at wider precision, and a membrane
+# that truly sits within one ulp of the LIF threshold then flips its
+# comparator depending on how the chain was fused (found by the
+# property-based differential suite, tests/test_property_backends.py).
+# The oracles below therefore run every membrane recursion through
+# ``lax.scan`` (one committed rounding per step, at the carry) and
+# materialise the scaled pre-activations before the scan; the Pallas
+# kernels mirror that structure exactly — pre-activations stored to a VMEM
+# ref (store = rounding), membrane carried through ``lax.fori_loop``.
+# With ``beta`` a power of two (the hardware's shift-register decay) the
+# remaining per-step expression ``beta*v + pre`` is a single add of
+# committed f32 values, whose comparison against the threshold is exact
+# real arithmetic — deterministic on every backend.
+
+
 def ssa_attention_ref(
     q: Array,  # [G, N, D] binary int
     k: Array,  # [G, N, D]
@@ -60,6 +80,59 @@ def ssa_decode_ref(
     s = (counts_s > rs).astype(jnp.int32)
     counts_a = jnp.einsum("gnl,gld->gnd", s, vi)
     return (counts_a > ra).astype(jnp.uint8)
+
+
+def gather_kv_pages_ref(pool: Array, page_table: Array) -> Array:
+    """Materialise a slot-dense KV view from a paged spike-train pool.
+
+    ``pool [P, T, KV, page_len, d]`` holds physical spike pages; ``page_table
+    [B, MP]`` maps each slot's logical blocks to pages (entry 0 is the
+    permanently-zero *null page*, so unallocated blocks read as all-zero
+    spikes and mask themselves out of the SSA comparators).  Returns the
+    dense ``[T, B, KV, MP*page_len, d]`` view a non-paged decode would see.
+    """
+    g = pool[page_table]  # [B, MP, T, KV, page_len, d]
+    g = jnp.moveaxis(g, 2, 0)  # [T, B, MP, KV, page_len, d]
+    g = jnp.swapaxes(g, 2, 3)  # [T, B, KV, MP, page_len, d]
+    return g.reshape(g.shape[:3] + (-1, g.shape[-1]))
+
+
+def ssa_decode_paged_ref(
+    q: Array,  # [B, T, H, 1, D] binary — the new tokens' query spikes
+    kpool: Array,  # [P, T, KV, page_len, D] key spike page pool
+    vpool: Array,  # [P, T, KV, page_len, D] value spike page pool
+    page_table: Array,  # [B, MP] int32 page ids (0 = null page)
+    rs: Array,  # [B, T, H, 1, L] int32 in [0, D), L = MP*page_len
+    ra: Array,  # [B, T, H, 1, D] int32 in [0, I_max)
+) -> Array:
+    """Bit-exact paged SSA decode: one query row against page-gathered KV.
+
+    The block-paged counterpart of :func:`ssa_decode_ref`: each slot's
+    cached K/V spike trains live in pool pages addressed through its page
+    table, and the stochastic attention row reduces over the gathered
+    logical positions in table order (page j covers logical positions
+    ``[j*page_len, (j+1)*page_len)``), so given the same comparator
+    integers the output is bit-identical to the dense oracle over the
+    materialised cache.  Null-page (unallocated) positions hold zero
+    spikes and can never beat a non-negative comparator draw.  GQA is
+    folded here: KV heads repeat across the query-head group.
+    """
+    b, t, h = q.shape[:3]
+    kv = kpool.shape[2]
+    kf = gather_kv_pages_ref(kpool, page_table)  # [T, B, KV, L, D]
+    vf = gather_kv_pages_ref(vpool, page_table)
+    if kv != h:
+        rep = h // kv
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    qi = jnp.moveaxis(q, 1, 0).astype(jnp.int32)  # [T, B, H, 1, D]
+    ki = kf.astype(jnp.int32)
+    vi = vf.astype(jnp.int32)
+    counts_s = jnp.einsum("tbhnd,tbhld->tbhnl", qi, ki)
+    s = (counts_s > jnp.moveaxis(rs, 1, 0)).astype(jnp.int32)
+    counts_a = jnp.einsum("tbhnl,tbhld->tbhnd", s, vi)
+    out = (counts_a > jnp.moveaxis(ra, 1, 0)).astype(jnp.uint8)
+    return jnp.moveaxis(out, 0, 1)  # [B, T, H, 1, D]
 
 
 def lif_ref(currents: Array, *, beta: float = 0.5, v_thresh: float = 1.0) -> Array:

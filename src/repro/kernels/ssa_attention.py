@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -130,6 +131,92 @@ def ssa_decode_kernel(
         out_shape=jax.ShapeDtypeStruct((g, 1, d), jnp.uint8),
         interpret=interpret,
     )(qp, kp, vp, rs, ra)
+
+
+def _ssa_decode_paged_body(tbl_ref, qp_ref, kp_ref, vp_ref, rs_ref, ra_ref,
+                           out_ref, acc_ref):
+    """One (slot, timestep, head, page) paged decode cell.
+
+    The stochastic attention row of :func:`_ssa_decode_body`, decomposed
+    over the slot's KV pages: the grid's last axis walks the slot's page
+    table (the K/V block specs gather page ``tbl[b, j]`` straight from the
+    physical pool via scalar-prefetch index maps — the dense cache is never
+    materialised), and the output AND-counts accumulate in ``acc_ref``
+    across pages.  This is exact: the score comparator is elementwise per
+    cached position (no cross-position normalisation in SSA), and the
+    output counts are integer sums, so any page-order accumulation
+    reproduces the dense reduction bit-for-bit.
+
+    qp [1, Wd] u32    — the new token's query spikes, packed along d_k
+    kp [PLp, Wd] u32  — ONE key page (gathered through the page table)
+    vp [Wp, D] u32    — one value page, packed along the in-page position
+    rs [1, PLp] i32   — this page's slice of the score-comparator integers
+    ra [1, D] i32     — output-comparator integers (page-invariant)
+    acc [1, D] i32    — output AND-count accumulator (VMEM scratch)
+    out [1, D] u8     — binary attention output, written at the last page
+    """
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qp = qp_ref[0, 0, 0]  # [1, Wd]
+    kp = kp_ref[0, 0, 0]  # [PLp, Wd]
+    counts_s = jnp.sum(_popcount(qp & kp), axis=-1).astype(jnp.int32)[None, :]
+    s = (counts_s > rs_ref[0, 0, 0]).astype(jnp.int32)  # [1, PLp]
+    sp = _pack_bits_kernel_axis(s)  # [1, Wp]
+    anded = jnp.swapaxes(sp, 0, 1) & vp_ref[0, 0, 0]  # [Wp, D]
+    acc_ref[...] += jnp.sum(_popcount(anded), axis=0).astype(jnp.int32)[None, :]
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _fire():
+        out_ref[0, 0, 0] = (acc_ref[...] > ra_ref[0, 0, 0]).astype(jnp.uint8)
+
+
+def ssa_decode_paged_kernel(
+    page_table: Array,  # [B, MP] i32 page ids (scalar-prefetched)
+    qp: Array,  # [B, T, H, 1, Wd] u32
+    kp: Array,  # [P, T, KV, PLp, Wd] u32 — the physical key page pool
+    vp: Array,  # [P, T, KV, Wp, D] u32 — value pool, packed along position
+    rs: Array,  # [B, T, H, 1, MP*PLp] i32
+    ra: Array,  # [B, T, H, 1, D] i32
+    *,
+    interpret: bool = False,
+) -> Array:
+    """Paged SSA decode: grid (slot, timestep, head, page-table column).
+
+    The page table rides scalar prefetch so the K/V block index maps can
+    dereference it — each program DMAs exactly one physical page out of the
+    pool, never a dense per-slot cache.  GQA is folded into the index maps
+    (query head ``ih`` reads KV head ``ih // (H // KV)``)."""
+    b, t, h, _, wd = qp.shape
+    mp = page_table.shape[1]
+    plp = kp.shape[3]
+    wp, d = vp.shape[3], vp.shape[4]
+    rep = h // kp.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, t, h, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, 1, wd), lambda ib, it, ih, j, tbl: (ib, it, ih, 0, 0)),
+            pl.BlockSpec((1, 1, 1, plp, wd),
+                         lambda ib, it, ih, j, tbl: (tbl[ib, j], it, ih // rep, 0, 0)),
+            pl.BlockSpec((1, 1, 1, wp, d),
+                         lambda ib, it, ih, j, tbl: (tbl[ib, j], it, ih // rep, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1, plp), lambda ib, it, ih, j, tbl: (ib, it, ih, 0, j)),
+            pl.BlockSpec((1, 1, 1, 1, d), lambda ib, it, ih, j, tbl: (ib, it, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, 1, d),
+                               lambda ib, it, ih, j, tbl: (ib, it, ih, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.int32)],
+    )
+    return pl.pallas_call(
+        _ssa_decode_paged_body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, 1, d), jnp.uint8),
+        interpret=interpret,
+    )(page_table, qp, kp, vp, rs, ra)
 
 
 def ssa_attention_kernel(

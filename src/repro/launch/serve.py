@@ -2,6 +2,8 @@
 
     python -m repro.launch.serve --arch yi-9b --requests 8
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --backend pallas
+    python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --paged \\
+        --page-len 8                            # paged spike-train KV cache
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --program \\
         --drift-step 60 --recal-every 3600      # PCM lifecycle + energy
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
@@ -63,6 +65,9 @@ def serve(
     drift_step_s: float = 0.0,
     recal_every_s: float = 0.0,
     mesh_spec: str = "",
+    paged: bool = False,
+    page_len: int = 8,
+    n_pages: int = 0,
 ):
     """Serve ``n_requests`` synthetic prompts; returns their outputs in
     submission order (continuous batching: a finished slot is refilled from
@@ -87,13 +92,20 @@ def serve(
               f"(drift {drift_step_s or 'wall-clock'} s/step, "
               f"GDC every {recal_every_s or 'never'} s)")
 
+    paged_kw = dict(paged=paged, page_len=page_len,
+                    n_pages=n_pages or None)
+    if paged:
+        print(f"[serve] paged spike-train KV cache: page_len={page_len}, "
+              f"pool={n_pages or slots * (cache_len // page_len) + 2} pages, "
+              "exact prefix sharing + chunked prefill")
     if mesh_spec:
         from repro.distributed import Executor
 
         shape = parse_mesh_spec(mesh_spec)
         mesh = make_serving_mesh(shape)
         ex = Executor(params, cfg, get_backend(backend), mesh)
-        sch = ex.scheduler(slots=slots, cache_len=cache_len, drift=drift)
+        sch = ex.scheduler(slots=slots, cache_len=cache_len, drift=drift,
+                           **paged_kw)
         print(f"[serve] mesh (data={shape[0]}, model={shape[1]}): "
               f"slots data-parallel, spiking kernels tensor-parallel "
               f"(TP {'on' if ex.plan.tp > 1 else 'off'})")
@@ -103,7 +115,7 @@ def serve(
         pctx = SH.make_pctx(mesh, parallel)
         sch = BatchScheduler(
             params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
-            pctx=pctx, moe_impl=parallel.moe_impl, drift=drift,
+            pctx=pctx, moe_impl=parallel.moe_impl, drift=drift, **paged_kw,
         )
     rng = jax.random.PRNGKey(seed + 1)
     prompts: List[jnp.ndarray] = [
@@ -119,6 +131,11 @@ def serve(
     print(f"[serve] served {st.requests} requests, {st.decoded_tokens} tokens "
           f"in {dt:.2f}s ({st.decoded_tokens/max(dt,1e-9):.1f} tok/s, "
           f"{st.decode_steps} batched decode steps, {st.admissions} admissions)")
+    if paged:
+        print(f"[serve] pages: peak {st.pages_in_use_peak} in use, "
+              f"{st.prefix_hits} prefix hits ({st.prefix_hit_tokens} prompt "
+              f"tokens reused), {st.cow_copies} copy-on-writes, "
+              f"peak {st.peak_active_slots} concurrent slots")
     if st.energy_j > 0:
         per_tok = st.energy_j / max(st.decoded_tokens, 1)
         print(f"[serve] energy: {st.energy_j*1e6:.2f} uJ total "
@@ -144,6 +161,14 @@ def main(argv=None):
     ap.add_argument("--mesh", default="",
                     help="serve on a (data, model) mesh, e.g. 2x4 or 4 "
                          "(data-parallel only); needs data*model devices")
+    ap.add_argument("--paged", action="store_true", default=False,
+                    help="block-paged spike-train KV cache (spiking SSA "
+                         "archs): exact prefix sharing + chunked prefill")
+    ap.add_argument("--page-len", type=int, default=8,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="physical page-pool size (--paged; 0 = slots x "
+                         "cache_len / page_len + reserved)")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     ap.add_argument("--program", action="store_true", default=False,
                     help="program spiking linears onto simulated PCM first")
@@ -155,7 +180,8 @@ def main(argv=None):
     serve(a.arch, smoke=a.smoke, n_requests=a.requests, slots=a.slots,
           max_new=a.max_new, cache_len=a.cache_len, backend=a.backend,
           program=a.program, drift_step_s=a.drift_step,
-          recal_every_s=a.recal_every, mesh_spec=a.mesh)
+          recal_every_s=a.recal_every, mesh_spec=a.mesh, paged=a.paged,
+          page_len=a.page_len, n_pages=a.pages)
 
 
 if __name__ == "__main__":

@@ -599,6 +599,23 @@ def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
     return out, {"sk": sk, "sv": sv, "pos": pos + 1}
 
 
+def _spiking_decode_ffn_tail(params, s: Array, cfg: ModelConfig,
+                             pctx: ParallelCtx, keys_for, backend) -> Array:
+    """The FFN half of a spiking decode block (norm2/mlp/moe), shared by the
+    slot-dense and paged decode paths so the two are op-for-op identical."""
+    if "norm2" not in params:
+        return s
+    if "moe" in params:
+        rate = SP.rate_decode(s.astype(jnp.float32)).astype(model_dtype(cfg))
+        ym, _ = M.moe_apply(params["moe"], rate, cfg, pctx, impl="dense")
+        return s + _slot_rate_encode(keys_for(200003), ym, s.shape[0])
+    h1 = backend.spiking_linear(
+        None, _lin_operand(params["mlp"]["wi"], s.shape[-1]), s, part="col")
+    return s + backend.spiking_linear(
+        None, _lin_operand(params["mlp"]["wo"], h1.shape[-1]),
+        h1.astype(s.dtype), part="row").astype(s.dtype)
+
+
 def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
                                 pctx: ParallelCtx, mixer: str, slot_keys: Array,
                                 uid, backend):
@@ -619,18 +636,7 @@ def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
         else:
             y, cache = R.rglru_decode(params["mixer"], rate, cache, cfg)
         s = s + _slot_rate_encode(keys_for(100003), y, s.shape[0])
-    if "norm2" in params:
-        if "moe" in params:
-            rate = SP.rate_decode(s.astype(jnp.float32)).astype(model_dtype(cfg))
-            ym, _ = M.moe_apply(params["moe"], rate, cfg, pctx, impl="dense")
-            s = s + _slot_rate_encode(keys_for(200003), ym, s.shape[0])
-        else:
-            h1 = backend.spiking_linear(
-                None, _lin_operand(params["mlp"]["wi"], s.shape[-1]), s,
-                part="col")
-            s = s + backend.spiking_linear(
-                None, _lin_operand(params["mlp"]["wo"], h1.shape[-1]),
-                h1.astype(s.dtype), part="row").astype(s.dtype)
+    s = _spiking_decode_ffn_tail(params, s, cfg, pctx, keys_for, backend)
     return s, cache
 
 
@@ -687,6 +693,178 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
     xr = SP.rate_decode(s.astype(jnp.float32)).astype(dt)
     logits = _unembed(params, xr, cfg)
     return logits, new_cache, act
+
+
+# ---------------------------------------------------------------------------
+# Block-paged spiking decode (paged spike-train KV cache)
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_supported(cfg: ModelConfig) -> bool:
+    """Paged spike-train KV caching serves spiking SSA stacks whose every
+    mixer is an attention block — attention-free mixers (ssd/rglru) carry
+    recurrent state with no position axis to page."""
+    return _spiking_decode_enabled(cfg) and all(
+        m in ("attn", "local") for m in cfg.block_pattern)
+
+
+def paged_pool_schema(cfg: ModelConfig, n_pages: int, page_len: int):
+    """Abstract paged KV pool: per-layer physical spike pages, no slot axis.
+
+    Each attention block's dense ``sk/sv [B, T, L, KV, hd]`` cache becomes a
+    global ``kp/vp [n_pages, T, KV, page_len, hd]`` page pool shared by all
+    serving slots; slots address blocks through an external page table.
+    Physical page 0 is the permanently-zero *null page* (unallocated table
+    entries read as zero spikes — comparator-masked) and page 1 is the
+    *trash page* inactive slots write into (never referenced by a table),
+    so one fixed-shape decode step serves any occupancy pattern."""
+    assert paged_decode_supported(cfg), (
+        "paged KV caching needs a spiking SSA stack of pure attention "
+        f"blocks, not {cfg.block_pattern}")
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    leaf = jax.ShapeDtypeStruct((n_pages, cfg.spike_T, kv, page_len, hd),
+                                jnp.uint8)
+    blk = {"kp": leaf, "vp": leaf}
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+    out: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        period = {f"blk{i}": dict(blk) for i in range(cfg.period)}
+        out["periods"] = stack(period, cfg.num_periods)
+    if cfg.remainder_layers:
+        out["remainder"] = {
+            f"blk{i}": dict(blk) for i in range(cfg.remainder_layers)}
+    return out
+
+
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_len: int):
+    """Materialise an all-zero page pool (every page starts free & zeroed)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_pool_schema(cfg, n_pages, page_len))
+
+
+def _spiking_attention_decode_paged(params, s: Array, blk_pool, cfg: ModelConfig,
+                                    page_table: Array, pos: Array,
+                                    write_pids: Array, slot_keys: Array,
+                                    backend):
+    """One-token SSA decode against the block-paged KV pool.
+
+    The paged mirror of :func:`_spiking_attention_decode`: the new token's
+    K/V spike trains scatter into the *physical* page each slot's scheduler
+    designated (``write_pids [B]`` — the slot's private page for logical
+    block ``pos // page_len``, or the trash page for idle slots), and the
+    query attends through the page table via the backend's paged decode.
+    Q/K/V/O projections are the same backend spiking linears as the dense
+    path, so for identical logical cache content the two paths are
+    bit-identical on the bit-exact substrates."""
+    t, b, _, d = s.shape
+    h, hd, kv = cfg.num_heads, cfg.resolved_head_dim, cfg.num_kv_heads
+
+    def proj(w):  # LIF(W s^t) -> [T,B,heads,hd]
+        out = backend.spiking_linear(None, _lin_operand(w, d), s, part="col")
+        return out.reshape(t, b, -1, hd)
+
+    q = proj(params["wq"])  # [T,B,H,hd]
+    k_new = proj(params["wk"])  # [T,B,KV,hd]
+    v_new = proj(params["wv"])
+    page_len = blk_pool["kp"].shape[3]
+    off = pos % page_len
+    # scatter each slot's new K/V train into its designated physical page
+    kp = blk_pool["kp"].at[write_pids, :, :, off].set(
+        jnp.moveaxis(k_new, 0, 1).astype(jnp.uint8))
+    vp = blk_pool["vp"].at[write_pids, :, :, off].set(
+        jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
+    i_max = page_table.shape[1] * page_len  # logical cache capacity
+    a = backend.ssa_attention_decode_paged(
+        slot_keys, q[:, :, :, None, :], kp, vp, page_table, i_max=i_max)
+    a = a.reshape(t, b, 1, h * hd).astype(s.dtype)
+    out = backend.spiking_linear(None, _lin_operand(params["wo"], h * hd), a,
+                                 part="row")
+    return out, {"kp": kp, "vp": vp}
+
+
+def _apply_block_spiking_decode_paged(params, s: Array, blk_pool,
+                                      cfg: ModelConfig, pctx: ParallelCtx,
+                                      page_table: Array, pos: Array,
+                                      write_pids: Array, slot_keys: Array,
+                                      uid, backend):
+    """Spiking residual block over the paged pool (decode flavour)."""
+
+    def keys_for(tag):
+        return jax.vmap(lambda kk: jax.random.fold_in(kk, tag + uid))(slot_keys)
+
+    h, blk_pool = _spiking_attention_decode_paged(
+        params["mixer"], s, blk_pool, cfg, page_table, pos, write_pids,
+        keys_for(1), backend)
+    s = s + h.astype(s.dtype)
+    s = _spiking_decode_ffn_tail(params, s, cfg, pctx, keys_for, backend)
+    return s, blk_pool
+
+
+def paged_decode_step(params, pool, page_table: Array, tokens: Array,
+                      pos: Array, seeds: Array, write_pids: Array,
+                      cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
+                      *, backend=None):
+    """One spiking decode step over the block-paged KV pool.
+
+    tokens [B,1], pos [B] (each slot's logical write position), seeds [B]
+    uint32 (the PRN stream id this step — the request seed during decode,
+    the *content key* of the position during chunked prefill), write_pids
+    [B] (each slot's private physical page for block ``pos // page_len``;
+    the trash page for idle slots) -> (logits [B,1,V], new pool, activity
+    [B]).
+
+    All sampling is keyed ``f(seed, pos, ...)`` exactly as the dense
+    :func:`decode_step`, and the K/V content reachable through a slot's
+    page table equals its dense cache, so paged serving is bit-identical
+    to dense serving on the bit-exact backends — while prompt prefixes
+    shared between requests resolve to the *same physical pages*."""
+    backend = backend or _default_backend()
+    assert paged_decode_supported(cfg)
+    dt = model_dtype(cfg)
+    x = L.embed(params["embed"], tokens, dt) * jnp.asarray(jnp.sqrt(cfg.d_model), dt)
+    slot_keys = _slot_base_keys(seeds, pos)
+    enc_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 0))(slot_keys)
+    s = _slot_rate_encode(enc_keys, x, cfg.spike_T)  # [T,B,1,d] float32
+
+    def slot_events(st):  # [T,B,1,d] -> [B] spike events
+        return jnp.sum(st.astype(jnp.float32), axis=(0, 2, 3))
+
+    act = slot_events(s)
+    new_pool: Dict[str, Any] = {}
+    if cfg.num_periods > 0:
+        def period_body(carry, xs):
+            s, act = carry
+            pp, pc, pidx = xs
+            nc = {}
+            for i in range(cfg.period):
+                s, c = _apply_block_spiking_decode_paged(
+                    pp[f"blk{i}"], s, pc[f"blk{i}"], cfg, pctx, page_table,
+                    pos, write_pids, slot_keys, pidx * cfg.period + i, backend)
+                nc[f"blk{i}"] = c
+                act = act + slot_events(s)
+            return (s, act), nc
+
+        (s, act), new_pool["periods"] = lax.scan(
+            period_body, (s, act),
+            (params["periods"], pool["periods"], jnp.arange(cfg.num_periods)))
+    if cfg.remainder_layers:
+        rem = {}
+        base_uid = cfg.num_periods * cfg.period
+        for i in range(cfg.remainder_layers):
+            s, c = _apply_block_spiking_decode_paged(
+                params["remainder"][f"blk{i}"], s, pool["remainder"][f"blk{i}"],
+                cfg, pctx, page_table, pos, write_pids, slot_keys,
+                base_uid + i, backend)
+            rem[f"blk{i}"] = c
+            act = act + slot_events(s)
+        new_pool["remainder"] = rem
+    xr = SP.rate_decode(s.astype(jnp.float32)).astype(dt)
+    logits = _unembed(params, xr, cfg)
+    return logits, new_pool, act
 
 
 def decode_step(

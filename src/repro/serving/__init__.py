@@ -1,22 +1,38 @@
 """Continuous-batching serving subsystem for the Xpikeformer engine.
 
-Architecture (see README "Serving"):
+Architecture (see README "Serving" / "Paged spike-train KV cache"):
 
     BatchScheduler  — admission / eviction over a request queue
         |
-    DecodeState     — slot-major cache pytree (spiking KV trains or ANN KV /
+    DecodeState     — slot-dense cache pytree (spiking KV trains or ANN KV /
         |             recurrent state) + per-slot tokens / seeds / occupancy
-        |
+    PagedDecodeState— or the block-paged layout: a global spike-page pool +
+        |             per-slot page tables, refcounted host-side (PagePool)
+        |             with copy-on-write and an exact-prefix page cache
     decode_step     — ONE jit-compiled batched step through the engine's
-                      pluggable Backend (reference / integer / pallas)
+                      pluggable Backend (reference / integer / pallas); in
+                      paged mode chunked prefill rides the same step
 """
 
+from repro.serving.pages import PagePool
 from repro.serving.scheduler import BatchScheduler, Request, ServeStats
 from repro.serving.state import (
+    NULL_PAGE,
+    RESERVED_PAGES,
+    TRASH_PAGE,
     DecodeState,
+    PagedDecodeState,
+    content_keys,
+    init_paged_state,
     init_state,
     make_decode_fn,
+    make_paged_decode_fn,
     make_prefill_fn,
+    paged_admit_slot,
+    paged_release_slot,
+    paged_set_table_entry,
+    pool_copy_page,
+    pool_zero_pages,
     release_slot,
     slot_slice,
     slot_splice,
@@ -26,12 +42,25 @@ from repro.serving.state import (
 
 __all__ = [
     "BatchScheduler",
+    "PagePool",
     "Request",
     "ServeStats",
     "DecodeState",
+    "PagedDecodeState",
+    "NULL_PAGE",
+    "TRASH_PAGE",
+    "RESERVED_PAGES",
+    "content_keys",
     "init_state",
+    "init_paged_state",
     "make_decode_fn",
+    "make_paged_decode_fn",
     "make_prefill_fn",
+    "paged_admit_slot",
+    "paged_release_slot",
+    "paged_set_table_entry",
+    "pool_copy_page",
+    "pool_zero_pages",
     "release_slot",
     "slot_slice",
     "slot_splice",

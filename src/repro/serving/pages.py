@@ -1,0 +1,189 @@
+"""PagePool: host-side accounting for the block-paged spike-train KV cache.
+
+The device side of paged serving is dumb on purpose — a zero-initialised
+physical page pool plus per-slot page tables inside
+:class:`repro.serving.state.PagedDecodeState`.  Everything stateful lives
+here, in O(pages) host bookkeeping:
+
+* **free list + refcounts** — a page is writable iff its refcount is 1;
+  releasing the last reference frees it (the scheduler zeroes freed pages
+  on device before reuse).  Double-free and foreign-page release raise.
+* **prefix cache** — an exact-match LRU map from *chained block keys* to
+  physical pages: a full prompt block is keyed by ``(parent chain id,
+  its own page_len tokens)``, where the parent id names the cache entry
+  of the preceding block (0 = the empty prefix).  The chain makes
+  matching exact by construction — a hit proves the whole token prefix
+  matches link by link — while hashing only O(page_len) tokens per block
+  instead of the O(n_ctx) full-prefix tuple (chain ids are never reused,
+  so a dropped-and-re-registered parent can never falsely adopt stale
+  children).  Because prefill spike randomness is keyed by (content,
+  position) — :func:`repro.serving.state.content_keys` — a hit is
+  *bit-identical* sharing: the new request's page table points at the
+  very pages an earlier request filled.  The cache holds its own
+  reference on every registered page, so shared prefixes survive the
+  registering request's eviction; under pool pressure, LRU entries whose
+  pages are cache-only (refcount 1) are dropped to free pages.
+* **reservations** — admission reserves a request's worst-case page need
+  up front, so mid-flight allocation can never deadlock the pool:
+  admission blocks on free pages, running slots never do.
+
+Copy-on-write pairs with the refcounts: registered (shared) pages are
+pristine — prompt content plus a zero tail — and any slot about to write
+into a page it does not own exclusively first copies the valid prefix to a
+fresh page (``state.pool_copy_page``) and repoints its table.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.state import NULL_PAGE, RESERVED_PAGES, TRASH_PAGE
+
+
+class PagePool:
+    """Refcounted physical-page accounting + exact-prefix page cache."""
+
+    def __init__(self, n_pages: int, page_len: int):
+        if n_pages <= RESERVED_PAGES:
+            raise ValueError(
+                f"n_pages ({n_pages}) must exceed the {RESERVED_PAGES} "
+                "reserved pages (null + trash)")
+        self.n_pages = n_pages
+        self.page_len = page_len
+        self.refcount = np.zeros(n_pages, np.int32)
+        self.refcount[NULL_PAGE] = self.refcount[TRASH_PAGE] = 1  # immortal
+        self._free: List[int] = list(range(n_pages - 1, RESERVED_PAGES - 1, -1))
+        self._reserved = 0
+        # chained-block key -> (page id, chain id | None); insertion order
+        # is the LRU order.  Chain ids are fresh monotone ints (0 = the
+        # empty-prefix root) so evicted parents can never be confused with
+        # later re-registrations.
+        self._prefix: "OrderedDict[Tuple, Tuple[int, Optional[int]]]" = \
+            OrderedDict()
+        self._next_chain = 1
+        # stats
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.cow_copies = 0
+        self.peak_in_use = 0
+
+    # -- capacity -------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - RESERVED_PAGES - len(self._free)
+
+    def available(self) -> int:
+        """Pages allocatable without eating someone else's reservation."""
+        return len(self._free) - self._reserved
+
+    def reserve(self, n: int) -> None:
+        if n > self.available():
+            raise RuntimeError(
+                f"page reservation of {n} exceeds available {self.available()}")
+        self._reserved += n
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self._reserved, "unbalanced page reservation"
+        self._reserved -= n
+
+    # -- alloc / refcount ----------------------------------------------
+
+    def alloc(self, *, reserved: bool = False) -> int:
+        """Take a free (zeroed) page; ``reserved=True`` consumes one unit of
+        the caller's prior :meth:`reserve`."""
+        if not self._free:
+            raise RuntimeError("page pool exhausted (reservation bug?)")
+        if reserved:
+            self.unreserve(1)
+        pid = self._free.pop()
+        assert self.refcount[pid] == 0
+        self.refcount[pid] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pid
+
+    def retain(self, pid: int) -> None:
+        """Add a reference to a live page (prefix hit / cache registration)."""
+        if pid in (NULL_PAGE, TRASH_PAGE):
+            raise ValueError(f"cannot retain reserved page {pid}")
+        if self.refcount[pid] <= 0:
+            raise ValueError(f"retain of dead page {pid} (use-after-free)")
+        self.refcount[pid] += 1
+
+    def release(self, pid: int) -> bool:
+        """Drop a reference; returns True when the page became free (the
+        caller must zero it on device before it can be reused).  Releasing
+        an already-free page raises — the double-free guard."""
+        if pid in (NULL_PAGE, TRASH_PAGE):
+            raise ValueError(f"cannot release reserved page {pid}")
+        if self.refcount[pid] <= 0:
+            raise ValueError(f"double free of page {pid}")
+        self.refcount[pid] -= 1
+        if self.refcount[pid] == 0:
+            self._free.append(int(pid))
+            return True
+        return False
+
+    # -- prefix cache ---------------------------------------------------
+
+    def prefix_lookup(self, key: Tuple) -> Optional[Tuple[int, Optional[int]]]:
+        """Look a chained block key up; on hit, retains the page for the
+        caller, refreshes the entry's LRU position and returns ``(page id,
+        chain id)`` — the chain id keys the next block's lookup."""
+        ent = self._prefix.get(key)
+        if ent is None:
+            self.prefix_misses += 1
+            return None
+        self._prefix.move_to_end(key)
+        self.retain(ent[0])
+        self.prefix_hits += 1
+        return ent
+
+    def prefix_register(self, key: Tuple, pid: int, *,
+                        chain: bool = False) -> Optional[int]:
+        """Publish a pristine page under a chained block key (the cache
+        takes its own reference) and return the entry's chain id
+        (``chain=True`` mints one for full blocks so later blocks can link
+        to it; partial tails are leaves).  If the key is already cached —
+        e.g. two identical prompts prefilled concurrently — nothing is
+        retained and the existing chain id is returned so the caller's
+        chain stays canonical."""
+        ent = self._prefix.get(key)
+        if ent is not None:
+            return ent[1]
+        self.retain(pid)
+        cid = None
+        if chain:
+            cid = self._next_chain
+            self._next_chain += 1
+        self._prefix[key] = (int(pid), cid)
+        return cid
+
+    def prefix_evict(self, need: int) -> List[int]:
+        """Drop LRU prefix entries until ``need`` pages can be freed (only
+        entries whose page is cache-only — refcount 1 — actually free a
+        page; shared entries are dropped from the index but their pages
+        live on under the sharing slots).  Returns freed page ids for the
+        caller to zero on device."""
+        freed: List[int] = []
+        while len(freed) < need and self._prefix:
+            key, (pid, _) = self._prefix.popitem(last=False)
+            if self.release(pid):
+                freed.append(pid)
+        return freed
+
+    def prefix_contains(self, key: Tuple) -> bool:
+        return key in self._prefix
+
+    def prefix_len(self) -> int:
+        return len(self._prefix)
+
+    def cached_pages(self) -> Dict[Tuple, int]:
+        return {k: ent[0] for k, ent in self._prefix.items()}

@@ -13,6 +13,19 @@ A miniature vLLM-style serving loop for the Xpikeformer engine:
   slot out of the spiking comparators.
 * **decode** — one jit-compiled batched ``decode_step`` advances every slot;
   the scheduler only does O(slots) host bookkeeping per step.
+* **paged serving** (``paged=True``, spiking SSA configs) — K/V spike
+  trains live in a global block-paged pool
+  (:class:`~repro.serving.state.PagedDecodeState` +
+  :class:`~repro.serving.pages.PagePool`): refcounted pages with
+  copy-on-write, an exact-prefix cache that maps identical prompt prefixes
+  onto the *same physical pages* (bit-identical spike trains — prefill PRN
+  streams are content-keyed, see
+  :func:`~repro.serving.state.content_keys`), **chunked prefill** (prompt
+  tokens ride the same batched decode step as everyone else's decode, one
+  position per step per prefilling slot, instead of a batch-1
+  prefill-then-splice), and admission that blocks on *free pages* rather
+  than free slots.  Generated token streams are bit-identical to dense
+  serving on the bit-exact backends.
 * **drift lifecycle** — when the params hold programmed PCM state
   (:class:`repro.aimc_device.AIMCDeviceState`) and a
   :class:`~repro.aimc_device.DriftPolicy` is set, the scheduler advances
@@ -48,8 +61,13 @@ from repro.energy import model as EM
 from repro.models import transformer as T
 from repro.models.moe import ParallelCtx
 from repro.serving import state as ST
+from repro.serving.pages import PagePool
 
 Array = jax.Array
+
+# paged-slot lifecycle: consuming prompt positions -> feeding the last
+# prompt token on the request's own PRN stream -> riding greedy argmax
+PREFILL, HANDOFF, DECODE = "prefill", "handoff", "decode"
 
 
 @dataclasses.dataclass
@@ -58,6 +76,16 @@ class Request:
     prompt: Array  # [P] int32
     max_new: int
     seed: int
+    # host-side views, filled by submit(): the prompt as numpy, its context
+    # length (prompt minus the last token, which seeds decode), and the
+    # per-position content keys that make prefill spike randomness a pure
+    # function of (token prefix, position) — the prefix-sharing contract
+    prompt_np: Optional[np.ndarray] = None
+    ckeys: Optional[np.ndarray] = None
+
+    @property
+    def n_ctx(self) -> int:
+        return len(self.prompt_np) - 1
 
 
 @dataclasses.dataclass
@@ -76,6 +104,12 @@ class ServeStats:
     energy_j: float = 0.0  # metered inference energy (events x op energies)
     t_device_s: float = 0.0  # PCM device clock at the last decode step
     recalibrations: int = 0  # GDC recalibrations run by the drift policy
+    # paged serving (zeros on the dense path)
+    prefix_hits: int = 0  # prefix-cache page hits across admissions
+    prefix_hit_tokens: int = 0  # prompt positions skipped via shared pages
+    cow_copies: int = 0  # copy-on-write page duplications
+    pages_in_use_peak: int = 0  # peak simultaneously-referenced pool pages
+    peak_active_slots: int = 0  # max slots concurrently occupied
 
     @property
     def tokens_per_sec(self) -> float:
@@ -118,6 +152,9 @@ class BatchScheduler:
         moe_impl: Optional[str] = None,
         drift: Optional[AD.DriftPolicy] = None,
         placement=None,
+        paged: bool = False,
+        page_len: int = 8,
+        n_pages: Optional[int] = None,
     ):
         self.placement = placement  # repro.distributed.Executor | None
         if placement is not None:
@@ -130,27 +167,83 @@ class BatchScheduler:
         self.pctx = pctx or ParallelCtx()
         self.moe_impl = moe_impl or ("ep_a2a" if cfg.is_moe else "dense")
         self.drift = drift
-        self.state = self._place_state(ST.init_state(cfg, slots, cache_len))
-        if placement is None:
-            decode_out = prefill_out = None
-            prefill_backend = backend
-            self._splice = ST.splice_request_jit
-            self._release = ST.release_slot_jit
+        self.paged = bool(paged)
+        if self.paged:
+            if not T.paged_decode_supported(cfg):
+                raise ValueError(
+                    "paged serving needs a spiking SSA stack of pure "
+                    f"attention blocks, not {cfg.name!r}")
+            if cache_len % page_len:
+                raise ValueError(
+                    f"cache_len ({cache_len}) must be a multiple of "
+                    f"page_len ({page_len})")
+            self.page_len = page_len
+            self.max_pages = cache_len // page_len
+            # default pool: the same cache memory a dense server of this
+            # slot count would allocate (prefix sharing turns that budget
+            # into extra concurrency)
+            self.n_pages = (slots * self.max_pages + ST.RESERVED_PAGES
+                            if n_pages is None else n_pages)
+            self.pages = PagePool(self.n_pages, page_len)
+            self.state = self._place_state(ST.init_paged_state(
+                cfg, slots, cache_len, page_len, self.n_pages))
+            if placement is None:
+                decode_out = None
+                self._admit_slot = ST.paged_admit_slot_jit
+                self._release_slot = ST.paged_release_slot_jit
+                self._set_entry = ST.paged_set_table_entry_jit
+                self._zero_pages_fn = ST.pool_zero_pages_jit
+                self._copy_page = ST.pool_copy_page_jit
+            else:
+                decode_out = placement.paged_decode_out_shardings(
+                    slots, cache_len, self.n_pages, page_len)
+                state_sh = placement.paged_state_shardings(
+                    slots, cache_len, self.n_pages, page_len)
+                self._admit_slot = jax.jit(ST.paged_admit_slot,
+                                           out_shardings=state_sh)
+                self._release_slot = jax.jit(ST.paged_release_slot,
+                                             out_shardings=state_sh)
+                self._set_entry = jax.jit(ST.paged_set_table_entry,
+                                          out_shardings=state_sh)
+                self._zero_pages_fn = jax.jit(ST.pool_zero_pages,
+                                              out_shardings=state_sh)
+                self._copy_page = jax.jit(ST.pool_copy_page,
+                                          out_shardings=state_sh)
+            self._decode = ST.make_paged_decode_fn(
+                cfg, self.pctx, backend, out_shardings=decode_out)
+            self._prefill = None
+            # host mirrors: page-table rows, per-slot logical positions,
+            # prefill cursors, slot phases, outstanding page reservations
+            self._table_rows = np.full((slots, self.max_pages), ST.NULL_PAGE,
+                                       np.int32)
+            self._slot_pos = [0] * slots
+            self._cursor = [0] * slots
+            self._phase = [DECODE] * slots
+            self._slot_reserved = [0] * slots
+            self._chain = [0] * slots  # prefix-cache chain id per slot
         else:
-            # mesh serving: slots ride the data axis, spiking kernels are
-            # tensor-parallel over model; out-shardings are pinned so the
-            # compiled decode feeds itself without resharding/recompiling
-            decode_out = placement.decode_out_shardings(slots, cache_len)
-            prefill_out = placement.replicated
-            prefill_backend = placement.prefill_backend
-            state_sh = placement.state_shardings(slots, cache_len)
-            self._splice = jax.jit(ST.splice_request, out_shardings=state_sh)
-            self._release = jax.jit(ST.release_slot, out_shardings=state_sh)
-        self._decode = ST.make_decode_fn(cfg, self.pctx, backend, self.moe_impl,
-                                         out_shardings=decode_out)
-        self._prefill = ST.make_prefill_fn(cfg, self.pctx, prefill_backend,
-                                           self.moe_impl,
-                                           out_shardings=prefill_out)
+            self.state = self._place_state(ST.init_state(cfg, slots, cache_len))
+            if placement is None:
+                decode_out = prefill_out = None
+                prefill_backend = backend
+                self._splice = ST.splice_request_jit
+                self._release = ST.release_slot_jit
+            else:
+                # mesh serving: slots ride the data axis, spiking kernels are
+                # tensor-parallel over model; out-shardings are pinned so the
+                # compiled decode feeds itself without resharding/recompiling
+                decode_out = placement.decode_out_shardings(slots, cache_len)
+                prefill_out = placement.replicated
+                prefill_backend = placement.prefill_backend
+                state_sh = placement.state_shardings(slots, cache_len)
+                self._splice = jax.jit(ST.splice_request, out_shardings=state_sh)
+                self._release = jax.jit(ST.release_slot, out_shardings=state_sh)
+            self._decode = ST.make_decode_fn(cfg, self.pctx, backend,
+                                             self.moe_impl,
+                                             out_shardings=decode_out)
+            self._prefill = ST.make_prefill_fn(cfg, self.pctx, prefill_backend,
+                                               self.moe_impl,
+                                               out_shardings=prefill_out)
         self._queue: Deque[Request] = deque()
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._remaining: List[int] = [0] * slots
@@ -203,8 +296,20 @@ class BatchScheduler:
         """Drop all requests and state but keep the compiled step functions
         (fresh server, warm jit cache — used by benchmarks and tests).
         The PCM device clock is *not* reset: drift is physical."""
-        self.state = self._place_state(
-            ST.init_state(self.cfg, self.slots, self.cache_len))
+        if self.paged:
+            self.pages = PagePool(self.n_pages, self.page_len)
+            self.state = self._place_state(ST.init_paged_state(
+                self.cfg, self.slots, self.cache_len, self.page_len,
+                self.n_pages))
+            self._table_rows[:] = ST.NULL_PAGE
+            self._slot_pos = [0] * self.slots
+            self._cursor = [0] * self.slots
+            self._phase = [DECODE] * self.slots
+            self._slot_reserved = [0] * self.slots
+            self._chain = [0] * self.slots
+        else:
+            self.state = self._place_state(
+                ST.init_state(self.cfg, self.slots, self.cache_len))
         self._queue.clear()
         self._slot_req = [None] * self.slots
         self._remaining = [0] * self.slots
@@ -229,21 +334,38 @@ class BatchScheduler:
                 f"prompt ({prompt.shape[0]}) + max_new ({max_new}) exceeds "
                 f"cache_len ({self.cache_len})"
             )
+        if self.paged:
+            worst = -(-(int(prompt.shape[0]) - 1 + max_new) // self.page_len)
+            usable = self.n_pages - ST.RESERVED_PAGES
+            if worst > usable:
+                raise ValueError(
+                    f"request needs up to {worst} pages but the pool only "
+                    f"has {usable} usable — it could never be admitted")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(Request(rid, prompt, max_new,
-                                   rid if seed is None else seed))
+        pnp = np.asarray(prompt, np.int32)
+        # content keys for the prompt context (prefill PRN streams): pure
+        # functions of the token prefix, so identical prefixes prefill
+        # bit-identically on every serving path — dense or paged
+        req = Request(rid, prompt, max_new, rid if seed is None else seed,
+                      prompt_np=pnp, ckeys=ST.content_keys(pnp[:-1]))
+        self._queue.append(req)
         self.stats.requests += 1
         return rid
 
     # -- slot management -----------------------------------------------
 
     def admit(self) -> int:
-        """Splice queued requests into free slots (continuous batching).
+        """Admit queued requests into free slots (continuous batching).
 
-        Prefills each admitted prompt through a batch-1 scan of the same
-        decode path, then scatters the filled cache into the slot while
-        the other slots' state is untouched.  Returns #admitted."""
+        Dense mode prefills each admitted prompt through a batch-1 scan of
+        the same decode path, then scatters the filled cache into the slot
+        while the other slots' state is untouched.  Paged mode reserves
+        pages, resolves prefix-cache hits, and leaves the remaining prompt
+        positions to chunked prefill inside the batched step — admission
+        blocks on *free pages*, not just free slots.  Returns #admitted."""
+        if self.paged:
+            return self._admit_paged()
         admitted = 0
         for slot in range(self.slots):
             if not self._queue or self._slot_req[slot] is not None:
@@ -253,10 +375,12 @@ class BatchScheduler:
             n_ctx = int(p.shape[0]) - 1  # last prompt token feeds the first decode
             padded = _bucket(max(n_ctx, 1))
             prompt_pad = jnp.zeros((padded,), jnp.int32).at[:n_ctx].set(p[:-1])
+            ckeys_pad = np.zeros((padded,), np.uint32)
+            ckeys_pad[:n_ctx] = req.ckeys
             cache1 = T.init_cache(self.cfg, 1, self.cache_len)
             cache1, pre_act = self._prefill(
                 self.params, prompt_pad, jnp.int32(n_ctx),
-                jnp.uint32(req.seed), cache1,
+                jnp.asarray(ckeys_pad), cache1,
             )
             self.state = self._splice(
                 self.state, slot, cache1, p[-1], jnp.uint32(req.seed))
@@ -276,24 +400,196 @@ class BatchScheduler:
             self.stats.prefill_tokens += n_ctx
             self.stats.admissions += 1
             admitted += 1
+        self.stats.peak_active_slots = max(
+            self.stats.peak_active_slots,
+            sum(r is not None for r in self._slot_req))
+        return admitted
+
+    # -- paged-mode page plumbing --------------------------------------
+
+    def _zero_freed(self, pids: List[int]) -> None:
+        """Zero freed physical pages on device (fixed-size jitted batches,
+        padded with the trash page so the step compiles once)."""
+        chunk = self.max_pages
+        for i in range(0, len(pids), chunk):
+            batch = np.full((chunk,), ST.TRASH_PAGE, np.int32)
+            part = pids[i:i + chunk]
+            batch[:len(part)] = part
+            self.state = self._zero_pages_fn(self.state, jnp.asarray(batch))
+
+    def _cow(self, slot: int, tp: int, src: int, keep_upto: int) -> int:
+        """Copy-on-write: give ``slot`` exclusive ownership of logical block
+        ``tp`` by copying the shared page's valid prefix (``< keep_upto``
+        in-page positions) into a fresh page and repointing its table."""
+        dst = self.pages.alloc(reserved=True)
+        self._slot_reserved[slot] -= 1
+        self.state = self._copy_page(self.state, jnp.int32(src),
+                                     jnp.int32(dst), jnp.int32(keep_upto))
+        self.state = self._set_entry(self.state, jnp.int32(slot),
+                                     jnp.int32(tp), jnp.int32(dst))
+        self._table_rows[slot, tp] = dst
+        if self.pages.release(src):  # cache entry may have been LRU-evicted
+            self._zero_freed([src])
+        self.pages.cow_copies += 1
+        return dst
+
+    def _register_prefix(self, slot: int, upto: int) -> None:
+        """Publish the page holding context positions up to ``upto`` (the
+        end of a just-completed block, or the whole context for a partial
+        tail block) in the prefix cache, keyed by (parent chain id, the
+        block's own tokens) — O(page_len) hashing per block, exact by
+        chain construction.  Tail blocks cost one reserved page later —
+        the registrant's next write copy-on-writes — so they are
+        registered opportunistically, only when the pool has slack."""
+        req = self._slot_req[slot]
+        tp = (upto - 1) // self.page_len
+        key = (self._chain[slot],
+               tuple(req.prompt_np[tp * self.page_len:upto].tolist()))
+        pid = int(self._table_rows[slot, tp])
+        if pid == ST.NULL_PAGE:
+            return
+        if upto % self.page_len:  # partial tail block: a chain leaf
+            if self.pages.prefix_contains(key) or self.pages.available() < 1:
+                return
+            self.pages.reserve(1)
+            self._slot_reserved[slot] += 1
+            self.pages.prefix_register(key, pid, chain=False)
+            return
+        # full block: adopt the (new or already-canonical) chain id so the
+        # slot's next block links to it
+        self._chain[slot] = self.pages.prefix_register(key, pid, chain=True)
+
+    def _admit_paged(self) -> int:
+        """Paged admission: exact-prefix page hits + worst-case page
+        reservation.  FIFO order is preserved — a request that cannot
+        reserve its pages blocks the queue (head-of-line) rather than
+        being overtaken, so admission order never depends on prompt sizes."""
+        admitted = 0
+        for slot in range(self.slots):
+            if not self._queue or self._slot_req[slot] is not None:
+                continue
+            req = self._queue[0]
+            ctx = req.prompt_np[:-1]
+            n_ctx = req.n_ctx
+            pl_ = self.page_len
+            total_pages = -(-(n_ctx + req.max_new) // pl_)
+            # leading-chain prefix match: full blocks while the chain is
+            # unbroken (each link keyed by (parent chain id, block
+            # tokens)), then — only off the complete full-block chain —
+            # the partial tail leaf
+            hits: List[int] = []
+            chain = 0  # the empty-prefix root
+            k = pl_
+            while k <= n_ctx:
+                ent = self.pages.prefix_lookup(
+                    (chain, tuple(ctx[k - pl_:k].tolist())))
+                if ent is None:
+                    break
+                hits.append(ent[0])
+                chain = ent[1]
+                k += pl_
+            partial_pid = None
+            if len(hits) == n_ctx // pl_ and n_ctx % pl_:
+                ent = self.pages.prefix_lookup(
+                    (chain, tuple(ctx[len(hits) * pl_:].tolist())))
+                partial_pid = None if ent is None else ent[0]
+            # worst-case unshared pages (a partial hit still allocates its
+            # page at the copy-on-write); block on pool pressure
+            needed = total_pages - len(hits)
+            if self.pages.available() < needed:
+                freed = self.pages.prefix_evict(
+                    needed - self.pages.available())
+                if freed:
+                    self._zero_freed(freed)
+            if self.pages.available() < needed:
+                # hand the hit refs back; prefix_evict may already have
+                # dropped these pages' cache entries, in which case ours
+                # was the last ref and the page must be zeroed before reuse
+                freed = [pid for pid in hits if self.pages.release(pid)]
+                if partial_pid is not None and self.pages.release(partial_pid):
+                    freed.append(partial_pid)
+                if freed:
+                    self._zero_freed(freed)
+                break
+            self._queue.popleft()
+            self.pages.reserve(needed)
+            row = np.full((self.max_pages,), ST.NULL_PAGE, np.int32)
+            row[:len(hits)] = hits
+            cursor = len(hits) * pl_
+            if partial_pid is not None:
+                row[n_ctx // pl_] = partial_pid
+                cursor = n_ctx
+            self._table_rows[slot] = row
+            self.state = self._admit_slot(
+                self.state, jnp.int32(slot), jnp.asarray(row),
+                jnp.uint32(req.seed), jnp.int32(cursor))
+            self._slot_req[slot] = req
+            self._remaining[slot] = req.max_new
+            self._slot_pos[slot] = cursor
+            self._cursor[slot] = cursor
+            self._phase[slot] = PREFILL if cursor < n_ctx else HANDOFF
+            self._slot_reserved[slot] = needed
+            self._chain[slot] = chain  # registrations link after the hits
+            self.outputs[req.rid] = []
+            self.stats.prefix_hit_tokens += cursor
+            self.stats.prefix_hits += len(hits) + (partial_pid is not None)
+            self.stats.admissions += 1
+            admitted += 1
+        self.stats.peak_active_slots = max(
+            self.stats.peak_active_slots,
+            sum(r is not None for r in self._slot_req))
         return admitted
 
     def evict(self, slot: int, requeue: bool = False) -> None:
-        """Release a slot's state (zero cache pages, clear occupancy).
+        """Release a slot's state (zero or refcount-release cache pages,
+        clear occupancy).
 
         With ``requeue=True`` the in-flight request restarts from its
         prompt on a later admission (preemption); otherwise its collected
-        output is kept as-is."""
+        output is kept as-is.  Evicting an unoccupied slot raises — the
+        use-after-evict / double-free guard."""
         req = self._slot_req[slot]
-        if req is not None and requeue:
+        if req is None:
+            raise ValueError(f"evict of unoccupied slot {slot} "
+                             "(double-evict or use-after-evict)")
+        if requeue:
             self._queue.appendleft(req)
             self.outputs.pop(req.rid, None)
         self._slot_req[slot] = None
         self._remaining[slot] = 0
-        self.state = self._release(self.state, slot)
+        if self.paged:
+            freed = []
+            for pid in self._table_rows[slot]:
+                if pid != ST.NULL_PAGE and self.pages.release(int(pid)):
+                    freed.append(int(pid))
+            if freed:
+                self._zero_freed(freed)
+            self.pages.unreserve(self._slot_reserved[slot])
+            self._slot_reserved[slot] = 0
+            self._table_rows[slot] = ST.NULL_PAGE
+            self._slot_pos[slot] = 0
+            self._cursor[slot] = 0
+            self._phase[slot] = DECODE
+            self._chain[slot] = 0
+            self.state = self._release_slot(self.state, jnp.int32(slot))
+        else:
+            self.state = self._release(self.state, slot)
         self.stats.evictions += 1
 
     # -- serving loop --------------------------------------------------
+
+    def _book_position(self, rid: int, spikes: float) -> None:
+        """Book one served position's energy — measured spike events x the
+        per-event op energy plus the static per-token cost — against the
+        request and the aggregate stats.  One formula for dense decode,
+        paged decode and paged chunked-prefill positions, so the
+        paged==dense energy equality holds by construction."""
+        e_j = (spikes * self._e_event_pj + self._e_token_pj) * 1e-12
+        self.request_spikes[rid] = self.request_spikes.get(rid, 0.0) + spikes
+        self.request_energy_j[rid] = (
+            self.request_energy_j.get(rid, 0.0) + e_j)
+        self.stats.spike_events += spikes
+        self.stats.energy_j += e_j
 
     def step(self) -> int:
         """Admit, then advance every active slot one token.  Returns the
@@ -305,6 +601,8 @@ class BatchScheduler:
         a :class:`~repro.aimc_device.DriftPolicy` is set on programmed
         params (device clock from decode wall time, periodic GDC
         recalibration), without recompiling the jitted decode."""
+        if self.paged:
+            return self._step_paged()
         self.admit()
         if not any(r is not None for r in self._slot_req):
             return 0
@@ -322,18 +620,101 @@ class BatchScheduler:
                 continue
             self.outputs[req.rid].append(int(nxt[slot]))
             decoded += 1
-            spikes = float(act[slot])
-            e_j = (spikes * self._e_event_pj + self._e_token_pj) * 1e-12
-            self.request_spikes[req.rid] = (
-                self.request_spikes.get(req.rid, 0.0) + spikes)
-            self.request_energy_j[req.rid] = (
-                self.request_energy_j.get(req.rid, 0.0) + e_j)
-            self.stats.spike_events += spikes
-            self.stats.energy_j += e_j
+            self._book_position(req.rid, float(act[slot]))
             self._remaining[slot] -= 1
             if self._remaining[slot] == 0:
                 self.evict(slot)
         self.stats.decoded_tokens += decoded
+        self._advance_device_clock(step_s)
+        return decoded
+
+    def _step_paged(self) -> int:
+        """One paged batched step: chunked prefill and decode interleaved.
+
+        Each occupied slot advances one position — a *prompt* position
+        (chunked prefill: the next context token fed on its content-keyed
+        PRN stream), the admission handoff (the last prompt token on the
+        request's own stream), or a decode position (greedy argmax riding
+        the state).  Before the step, every writing slot is guaranteed an
+        exclusive physical page for its target block (allocation at block
+        boundaries, copy-on-write off shared pages); idle slots write the
+        trash page.  One jitted function serves all of it, compiled once.
+        Returns #tokens decoded (prompt chunks don't count)."""
+        self.admit()
+        if not any(r is not None for r in self._slot_req):
+            return 0
+        b = self.slots
+        feed_tok = np.zeros((b,), np.int32)
+        feed_seed = np.zeros((b,), np.uint32)
+        feed_mask = np.zeros((b,), bool)
+        write_pids = np.full((b,), ST.TRASH_PAGE, np.int32)
+        for slot in range(b):
+            req = self._slot_req[slot]
+            if req is None:
+                feed_mask[slot] = True  # pin idle slots to token 0 / stream 0
+                continue
+            p = self._slot_pos[slot]
+            tp, off = divmod(p, self.page_len)
+            pid = int(self._table_rows[slot, tp])
+            if pid == ST.NULL_PAGE:  # block boundary: open a fresh page
+                pid = self.pages.alloc(reserved=True)
+                self._slot_reserved[slot] -= 1
+                self._table_rows[slot, tp] = pid
+                self.state = self._set_entry(self.state, jnp.int32(slot),
+                                             jnp.int32(tp), jnp.int32(pid))
+            elif self.pages.refcount[pid] > 1:  # shared (prefix cache): CoW
+                pid = self._cow(slot, tp, pid, off)
+            write_pids[slot] = pid
+            phase = self._phase[slot]
+            if phase == PREFILL:
+                cur = self._cursor[slot]
+                feed_tok[slot] = req.prompt_np[cur]
+                feed_seed[slot] = req.ckeys[cur]
+                feed_mask[slot] = True
+            elif phase == HANDOFF:
+                feed_tok[slot] = req.prompt_np[-1]
+                feed_seed[slot] = req.seed
+                feed_mask[slot] = True
+        t0 = time.time()
+        logits, self.state, act = self._decode(
+            self.params, self.state, jnp.asarray(feed_tok),
+            jnp.asarray(feed_seed), jnp.asarray(feed_mask),
+            jnp.asarray(write_pids))
+        nxt = np.asarray(self.state.tokens)  # syncs the step
+        step_s = time.time() - t0
+        self.stats.decode_s += step_s
+        self.stats.decode_steps += 1
+        act = np.asarray(act)
+        decoded = 0
+        for slot in range(b):
+            req = self._slot_req[slot]
+            if req is None:
+                continue
+            self._slot_pos[slot] += 1
+            phase = self._phase[slot]
+            if phase == PREFILL:
+                self._cursor[slot] += 1
+                cur = self._cursor[slot]
+                self.stats.prefill_tokens += 1
+                if cur % self.page_len == 0:  # completed block: publish it
+                    self._register_prefix(slot, cur)
+                if cur == req.n_ctx:
+                    if req.n_ctx % self.page_len:
+                        self._register_prefix(slot, req.n_ctx)
+                    self._phase[slot] = HANDOFF
+            else:
+                self.outputs[req.rid].append(int(nxt[slot]))
+                decoded += 1
+                if phase == HANDOFF:
+                    self._phase[slot] = DECODE
+                self._remaining[slot] -= 1
+            self._book_position(req.rid, float(act[slot]))
+            if self._remaining[slot] == 0:
+                self.evict(slot)
+        self.stats.decoded_tokens += decoded
+        self.stats.pages_in_use_peak = max(self.stats.pages_in_use_peak,
+                                           self.pages.peak_in_use)
+        self.stats.cow_copies = self.pages.cow_copies
         self._advance_device_clock(step_s)
         return decoded
 

@@ -1,22 +1,31 @@
-"""DecodeState: the per-slot serving state pytree + slot alloc/free ops.
+"""Serving state: slot-dense DecodeState and the block-paged PagedDecodeState.
 
-The serving analogue of a paged KV cache: one :class:`DecodeState` holds the
-whole continuous batch — the model cache pytree (ANN float KV / recurrent
-state, or binary spike-train KV for SSA configs), the next input token per
-slot, the per-slot PRN stream ids, and the slot occupancy mask.  Every leaf
-is slot-major, so admission and eviction are O(slot) scatter updates while
-the jitted ``decode_step`` keeps one fixed shape for the lifetime of the
-server.
+Two cache organisations back the continuous batch:
+
+* :class:`DecodeState` — the slot-dense layout: the model cache pytree (ANN
+  float KV / recurrent state, or binary spike-train KV for SSA configs)
+  keeps one fixed-length region per slot.  Admission and eviction are
+  O(slot) scatter updates; freed slots are *zeroed*, which both releases
+  the logical region and masks the slot out of the spiking comparators
+  (zero AND-counts never spike; ANN caches make stale keys unreachable via
+  ``pos = 0``).
+* :class:`PagedDecodeState` — the block-paged layout for spiking SSA
+  configs: K/V spike trains live in a global physical page pool
+  (``models.transformer.paged_pool_schema``) and each slot addresses its
+  logical blocks through a row of the page table.  Pages are refcounted
+  host-side (:class:`repro.serving.pages.PagePool`) with copy-on-write,
+  and a content-keyed prefix cache maps identical prompt prefixes onto the
+  *same physical pages* — exact, bit-identical sharing, because prefill
+  spike randomness is keyed by (content, position), not by request
+  (:func:`content_keys`).  Physical page 0 is the permanently-zero *null
+  page* (unallocated blocks read as zero spikes), page 1 the *trash page*
+  idle slots write into; both keep every step fixed-shape so the jitted
+  decode compiles exactly once.
 
 Cache leaves come in two stackings (see ``models/transformer.py``):
-``periods`` leaves are ``[n_periods, slots, ...]`` (layer-scanned) and
-``remainder`` leaves are ``[slots, ...]`` — the slot helpers below absorb
-that split so callers never touch it.
-
-Freed slots are *zeroed*, not just masked: for spiking SSA caches a zero
-K/V train is what masks the slot's stale positions out of the hardware
-comparators (zero AND-counts never spike), and for ANN caches ``pos = 0``
-makes stale keys unreachable.
+``periods`` leaves are ``[n_periods, slots|n_pages, ...]`` (layer-scanned)
+and ``remainder`` leaves drop the leading period axis — the slot/page
+helpers below absorb that split so callers never touch it.
 """
 
 from __future__ import annotations
@@ -26,12 +35,18 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.models import transformer as T
 from repro.models.moe import ParallelCtx
 
 Array = jax.Array
+
+# reserved physical pages of every paged pool
+NULL_PAGE = 0  # permanently zero; the target of unallocated table entries
+TRASH_PAGE = 1  # where idle slots' decode writes land; never read
+RESERVED_PAGES = 2
 
 
 @dataclasses.dataclass
@@ -132,8 +147,219 @@ def release_slot(state: DecodeState, slot) -> DecodeState:
 
 
 # ---------------------------------------------------------------------------
+# Content-keyed prefill PRN streams
+# ---------------------------------------------------------------------------
+
+
+def _splitmix32(x: int) -> int:
+    """32-bit splitmix finaliser (int -> int in [0, 2^32), well-mixed)."""
+    x = (x + 0x9E3779B9) & 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x21F0AAAD) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * 0x735A2D97) & 0xFFFFFFFF
+    x ^= x >> 15
+    return x
+
+
+def content_keys(tokens) -> np.ndarray:
+    """Per-position *content* PRN stream ids for prompt prefill.
+
+    ``key[i] = H(tokens[0..i])`` — a rolling hash chain, so the spike
+    randomness drawn at prompt position ``i`` depends only on the token
+    prefix up to ``i`` (plus the position itself, folded in downstream by
+    ``_slot_base_keys``), never on the request.  Two requests sharing a
+    prompt prefix therefore produce *bit-identical* K/V spike trains for
+    the shared positions — the property that lets the paged prefix cache
+    map them onto the same physical pages.  Decode keeps per-request
+    seeds, so generations still diverge per request.
+
+    (A 32-bit hash collision between different prefixes only makes them
+    share comparator randomness, never content — harmless.  The prefix
+    cache itself matches on exact token tuples, not on this hash.)
+    """
+    toks = np.asarray(tokens, np.int64)
+    out = np.empty(toks.shape[0], np.uint32)
+    h = 0x1C0FFEE5
+    for i, t in enumerate(toks):
+        h = _splitmix32(h ^ _splitmix32(int(t) & 0xFFFFFFFF))
+        out[i] = h
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block-paged serving state (spiking SSA configs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PagedDecodeState:
+    """One paged continuous batch: global KV page pool + per-slot counters.
+
+    pool        — paged KV pool pytree (``kp/vp [.., n_pages, T, KV,
+                  page_len, hd]`` leaves; no slot axis)
+    page_table  — [slots, max_pages] int32 physical page per logical block
+                  (NULL_PAGE = unallocated: reads as zero spikes)
+    pos         — [slots] int32, each slot's next logical write position
+    tokens      — [slots] int32, next input token per slot
+    seeds       — [slots] uint32, per-slot PRN stream id
+    active      — [slots] bool, slot occupancy
+    """
+
+    pool: Any
+    page_table: Array
+    pos: Array
+    tokens: Array
+    seeds: Array
+    active: Array
+
+    @property
+    def page_len(self) -> int:
+        leaf = jax.tree.leaves(self.pool)[0]
+        return leaf.shape[-2]
+
+    @property
+    def n_pages(self) -> int:
+        # leaves are [n_pages, ...] (remainder) or [periods, n_pages, ...]
+        leaf = jax.tree.leaves(self.pool)[0]
+        return leaf.shape[-5]
+
+
+jax.tree_util.register_pytree_node(
+    PagedDecodeState,
+    lambda s: ((s.pool, s.page_table, s.pos, s.tokens, s.seeds, s.active), None),
+    lambda _, c: PagedDecodeState(*c),
+)
+
+
+def init_paged_state(cfg, slots: int, cache_len: int, page_len: int,
+                     n_pages: int) -> PagedDecodeState:
+    """A fresh paged batch: all pages free and zeroed, all tables null."""
+    assert cache_len % page_len == 0, (
+        f"cache_len ({cache_len}) must be a multiple of page_len ({page_len})")
+    assert n_pages > RESERVED_PAGES, "pool needs pages beyond null+trash"
+    return PagedDecodeState(
+        pool=T.init_paged_pool(cfg, n_pages, page_len),
+        page_table=jnp.full((slots, cache_len // page_len), NULL_PAGE,
+                            jnp.int32),
+        pos=jnp.zeros((slots,), jnp.int32),
+        tokens=jnp.zeros((slots,), jnp.int32),
+        seeds=jnp.zeros((slots,), jnp.uint32),
+        active=jnp.zeros((slots,), bool),
+    )
+
+
+def _map_pool(pool, f):
+    return jax.tree.map(
+        lambda a: f(a) if a.ndim == 5 else jax.vmap(f)(a), pool)
+
+
+def paged_admit_slot(state: PagedDecodeState, slot, table_row, seed, pos
+                     ) -> PagedDecodeState:
+    """Open a slot: install its (prefix-hit-prefilled) page-table row and
+    starting position (the first *unshared* prompt position — prefix-cache
+    hits skip straight past their pages); the scheduler feeds tokens and
+    PRN stream ids per step."""
+    return dataclasses.replace(
+        state,
+        page_table=state.page_table.at[slot].set(table_row),
+        pos=state.pos.at[slot].set(pos),
+        seeds=state.seeds.at[slot].set(seed),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def paged_release_slot(state: PagedDecodeState, slot) -> PagedDecodeState:
+    """Close a slot: null its table row and zero its counters.  (The host
+    :class:`~repro.serving.pages.PagePool` decides which of its pages are
+    actually freed — shared pages live on under other refs.)"""
+    return dataclasses.replace(
+        state,
+        page_table=state.page_table.at[slot].set(NULL_PAGE),
+        pos=state.pos.at[slot].set(0),
+        tokens=state.tokens.at[slot].set(0),
+        seeds=state.seeds.at[slot].set(0),
+        active=state.active.at[slot].set(False),
+    )
+
+
+def paged_set_table_entry(state: PagedDecodeState, slot, idx, pid
+                          ) -> PagedDecodeState:
+    """Point one logical block of one slot at a physical page."""
+    return dataclasses.replace(
+        state, page_table=state.page_table.at[slot, idx].set(pid))
+
+
+def pool_zero_pages(state: PagedDecodeState, pids: Array) -> PagedDecodeState:
+    """Zero a fixed-size batch of physical pages (freed pages must read as
+    zero spikes before reuse; pad the batch with TRASH_PAGE ids)."""
+    def z(leaf):
+        return leaf.at[pids].set(jnp.zeros((), leaf.dtype))
+
+    return dataclasses.replace(state, pool=_map_pool(state.pool, z))
+
+
+def pool_copy_page(state: PagedDecodeState, src, dst, keep_upto
+                   ) -> PagedDecodeState:
+    """Copy-on-write: duplicate page ``src`` into ``dst``, keeping only
+    in-page positions ``< keep_upto`` (later offsets are zeroed so the new
+    owner's unwritten tail stays comparator-masked)."""
+    def cp(leaf):  # [n_pages, T, KV, page_len, hd]
+        page = leaf[src]
+        keep = (jnp.arange(leaf.shape[-2]) < keep_upto)[None, None, :, None]
+        return leaf.at[dst].set(jnp.where(keep, page, 0).astype(leaf.dtype))
+
+    return dataclasses.replace(state, pool=_map_pool(state.pool, cp))
+
+
+paged_admit_slot_jit = jax.jit(paged_admit_slot)
+paged_release_slot_jit = jax.jit(paged_release_slot)
+paged_set_table_entry_jit = jax.jit(paged_set_table_entry)
+pool_zero_pages_jit = jax.jit(pool_zero_pages)
+pool_copy_page_jit = jax.jit(pool_copy_page)
+
+
+# ---------------------------------------------------------------------------
 # Jitted step / prefill factories
 # ---------------------------------------------------------------------------
+
+
+def make_paged_decode_fn(cfg, pctx: ParallelCtx, backend,
+                         out_shardings=None):
+    """The single jitted batched step of a *paged* server — decode and
+    chunked prefill ride the same compiled function.
+
+    ``(params, state, feed_tok [B], feed_seed [B], feed_mask [B],
+    write_pids [B]) -> (logits, state', activity)``.  Slots with
+    ``feed_mask`` take their input token and PRN stream id from the feed
+    (chunked prefill: the next prompt token keyed by its *content key*;
+    admission handoff: the last prompt token keyed by the request seed) —
+    everything else rides the state like the dense step (greedy next-token
+    written back).  ``write_pids`` names each slot's private physical page
+    for this step's K/V write (the scheduler guarantees refcount-1
+    ownership via copy-on-write; idle slots point at the trash page).  The
+    fed seed persists into ``state.seeds``, so after the admission handoff
+    the slot keeps decoding on its request stream with no further feeds.
+    Every argument keeps one fixed shape: the step compiles exactly once
+    for the server's lifetime (drift/GDC param updates stay
+    leaf-value-only, as in :func:`make_decode_fn`).
+    """
+
+    def step(params, state: PagedDecodeState, feed_tok, feed_seed, feed_mask,
+             write_pids):
+        tok = jnp.where(feed_mask, feed_tok, state.tokens)
+        seed = jnp.where(feed_mask, feed_seed, state.seeds)
+        logits, pool, act = T.paged_decode_step(
+            params, state.pool, state.page_table, tok[:, None], state.pos,
+            seed, write_pids, cfg, pctx, backend=backend)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        st = dataclasses.replace(state, pool=pool, pos=state.pos + 1,
+                                 tokens=nxt, seeds=seed)
+        return logits, st, act
+
+    if out_shardings is None:
+        return jax.jit(step)
+    return jax.jit(step, out_shardings=out_shardings)
 
 
 def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
@@ -174,24 +400,29 @@ def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
                     out_shardings=None):
     """Batch-1 prompt prefill through the *same* decode path as serving.
 
-    ``(params, prompt [P], length, seed, cache1) -> (cache1', activity)`` —
-    scans the padded prompt through single-token decode, gating cache
-    updates on ``idx < length`` so one compiled scan serves every prompt in
-    a padding bucket.  Going through ``decode_step`` (not the training
-    forward) keeps prefill bit-identical to decoding the prompt token by
-    token, which is what makes batched serving exactly reproduce
-    single-slot decoding.  ``activity`` is the prompt's total spike-event
-    count (valid positions only) — prefill energy is prompt-length
-    dependent and is booked against the request at admission.
+    ``(params, prompt [P], length, seeds [P], cache1) -> (cache1',
+    activity)`` — scans the padded prompt through single-token decode,
+    gating cache updates on ``idx < length`` so one compiled scan serves
+    every prompt in a padding bucket.  Going through ``decode_step`` (not
+    the training forward) keeps prefill bit-identical to decoding the
+    prompt token by token, which is what makes batched serving exactly
+    reproduce single-slot decoding.  ``seeds`` carries one PRN stream id
+    per prompt position — the *content keys* of :func:`content_keys`, so
+    prefill spike randomness is a pure function of (token prefix,
+    position) and identical prompt prefixes produce bit-identical spike
+    trains on every serving path, dense or paged.  ``activity`` is the
+    prompt's total spike-event count (valid positions only) — prefill
+    energy is prompt-length dependent and is booked against the request at
+    admission.
     """
 
-    def prefill(params, prompt, length, seed, cache1):
+    def prefill(params, prompt, length, seeds, cache1):
         def body(carry, xs):
             c, act = carry
-            tok, idx = xs
+            tok, sd, idx = xs
             _, c2, a = T.decode_step(
                 params, c, tok[None, None], cfg, pctx, moe_impl=moe_impl,
-                backend=backend, seeds=jnp.full((1,), seed, jnp.uint32),
+                backend=backend, seeds=sd[None],
                 with_activity=True,
             )
             keep = idx < length
@@ -201,7 +432,8 @@ def make_prefill_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
 
         (cache1, act), _ = lax.scan(
             body, (cache1, jnp.zeros((), jnp.float32)),
-            (prompt, jnp.arange(prompt.shape[0])))
+            (prompt, seeds.astype(jnp.uint32),
+             jnp.arange(prompt.shape[0])))
         return cache1, act
 
     if out_shardings is None:

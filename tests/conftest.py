@@ -1,4 +1,3 @@
-import itertools
 import os
 import sys
 import types
@@ -22,11 +21,13 @@ jax.config.update("jax_enable_x64", False)
 # Optional-dependency gate: hypothesis.
 #
 # The property tests use a small, fixed subset of the hypothesis API
-# (@given + integers/sampled_from strategies).  When the real package is
-# available (CI installs it from pyproject.toml) it is used unchanged; on
-# bare containers without it we install a deterministic fallback that runs
-# each @given test over a small round-robin sweep of the strategy domains,
-# so the suite still collects and exercises the properties.
+# (@given with keyword strategies: integers / sampled_from / booleans /
+# just, plus @settings).  When the real package is available (CI installs
+# it from pyproject.toml) it is used unchanged; on bare containers without
+# it we install a deterministic fallback that degrades each @given test to
+# a fixed, well-spread sample of the strategy product space — the suite
+# still collects and genuinely exercises the properties, just on fixed
+# seeds instead of shrinking random search.
 # ---------------------------------------------------------------------------
 
 try:  # pragma: no cover - environment-dependent
@@ -38,9 +39,10 @@ except ModuleNotFoundError:  # pragma: no cover - environment-dependent
             self.examples = list(examples)
 
     def _integers(lo, hi):
-        mid = (lo + hi) // 2
-        vals = sorted({lo, mid, hi})
-        return _Strategy(vals)
+        span = hi - lo
+        vals = {lo, hi, lo + span // 2, lo + span // 3, lo + (2 * span) // 3,
+                lo + 1 if span >= 1 else lo, hi - 1 if span >= 1 else hi}
+        return _Strategy(sorted(v for v in vals if lo <= v <= hi))
 
     def _sampled_from(seq):
         return _Strategy(seq)
@@ -48,21 +50,41 @@ except ModuleNotFoundError:  # pragma: no cover - environment-dependent
     def _booleans():
         return _Strategy([False, True])
 
+    def _just(value):
+        return _Strategy([value])
+
+    _MAX_FALLBACK_EXAMPLES = 8
+
     def _given(**strategies):
         names = list(strategies)
 
         def deco(fn):
             def wrapper(*args, **kwargs):
                 pools = [strategies[n].examples for n in names]
-                longest = max(len(p) for p in pools)
-                n_runs = min(max(longest, 1) + 2, 8)
-                cycles = [itertools.cycle(p) for p in pools]
-                for _ in range(n_runs):
-                    drawn = {n: next(c) for n, c in zip(names, cycles)}
+                total = 1
+                for p in pools:
+                    total *= max(len(p), 1)
+                n_runs = min(total, _MAX_FALLBACK_EXAMPLES)
+                # deterministic, well-spread walk of the product space:
+                # golden-ratio (Fibonacci) index hashing decorrelates the
+                # mixed-radix digits, unlike aligned round-robin cycles
+                seen = set()
+                for i in range(total):
+                    idx = (i * 2654435761) % total
+                    if idx in seen:
+                        continue
+                    seen.add(idx)
+                    drawn = {}
+                    for n, p in zip(names, pools):
+                        idx, r = divmod(idx, max(len(p), 1))
+                        drawn[n] = p[r]
                     fn(*args, **kwargs, **drawn)
+                    if len(seen) >= n_runs:
+                        break
 
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
+            wrapper.hypothesis_fallback = True
             return wrapper
 
         return deco
@@ -76,10 +98,14 @@ except ModuleNotFoundError:  # pragma: no cover - environment-dependent
     _stub = types.ModuleType("hypothesis")
     _stub.given = _given
     _stub.settings = _settings
+    _stub.HealthCheck = types.SimpleNamespace(
+        too_slow="too_slow", data_too_large="data_too_large",
+        filter_too_much="filter_too_much")
     _strategies = types.ModuleType("hypothesis.strategies")
     _strategies.integers = _integers
     _strategies.sampled_from = _sampled_from
     _strategies.booleans = _booleans
+    _strategies.just = _just
     _stub.strategies = _strategies
     sys.modules["hypothesis"] = _stub
     sys.modules["hypothesis.strategies"] = _strategies
