@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.backend_forward",
     "benchmarks.aimc_forward",
     "benchmarks.serving_throughput",
+    "benchmarks.serving_load",
     "benchmarks.roofline",
     "benchmarks.table4_icl_ber",
     "benchmarks.table3_image_cls",

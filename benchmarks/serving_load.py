@@ -1,0 +1,296 @@
+"""Serving load generator: latency/goodput/energy under open-loop load.
+
+    PYTHONPATH=src python benchmarks/serving_load.py --smoke
+    PYTHONPATH=src python benchmarks/serving_load.py --smoke --http --json out.json
+
+Drives the async serving front door (:mod:`repro.server`) with an
+**open-loop Poisson arrival process** over a **prefix-share prompt
+mixture** (a fraction of requests share a long common prefix — the
+"system prompt" regime the paged KV cache is built for) and measures what
+an operator actually sees:
+
+* **TTFT** p50/p99 — submit-to-first-streamed-token, queueing included;
+* **per-token latency** (inter-token gap) p50/p99;
+* **goodput** — completed decoded tokens per wall-second of the run;
+* **J/token** — metered energy per decoded token, from the scheduler's
+  per-request spike-event meter.
+
+``--http`` runs the same workload through real sockets (HTTP POST
+/generate + SSE streaming) instead of the in-process front door — the
+transport tax becomes visible in the latency columns.
+
+Every run also serves the identical workload **offline** (all requests
+submitted up front to a bare ``BatchScheduler``) as the denominator for
+machine-robust gated ratios (CI gates the ``ratios`` block via
+``check_regression.py``; absolute latencies swing with runner hardware):
+
+* ``load_goodput_rel_offline_<arch>`` — open-loop goodput over offline
+  throughput.  < 1 by construction (arrival gaps + admission overhead);
+  a collapse means the front door is starving the scheduler.
+* ``load_j_per_token_parity_<arch>`` — offline J/token over load
+  J/token.  Energy metering is deterministic per request (spike events
+  are a pure function of the token stream), so this sits at ~1.0
+  regardless of batching order; drift means double- or under-booking.
+* ``load_p99_ttft_steps_inv_<arch>`` / ``load_p99_tpot_steps_inv_<arch>``
+  — mean batched-decode-step time over p99 TTFT / p99 per-token gap.
+  Both sides scale with the runner, so the ratio tracks *scheduling*
+  inflation (queue depth, pump latency), not CPU speed.
+
+Baselines for these four are set conservatively in
+``benchmarks/baseline.json``: tail latencies on shared CI runners are
+noisy, so the floor catches collapses (janky pump, stalled stream), not
+few-percent wiggles.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, reduced_config
+from repro.engine import get_backend
+from repro.models import transformer as T
+from repro.server import FrontDoor, HttpFrontDoor, QueueFull, read_sse
+from repro.serving import BatchScheduler
+
+SPIKING_ARCH = "xpikeformer-gpt-4-256"
+
+
+def percentile(xs, q: float) -> float:
+    """Nearest-rank percentile; 0.0 for an empty sample."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return float(xs[k])
+
+
+def build_workload(cfg, *, n_requests: int, rate: float, max_new: int,
+                   prefix_len: int, share_frac: float, seed: int):
+    """(prompt, max_new, seed, arrival_s) per request, fully seeded.
+
+    ``share_frac`` of the requests open with a common ``prefix_len``-token
+    prefix plus a unique 3-token tail; the rest are unique short prompts.
+    Arrivals are Poisson: exponential inter-arrival gaps at ``rate`` req/s.
+    """
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+    t = 0.0
+    work = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        if rng.random() < share_frac:
+            prompt = shared + rng.integers(0, cfg.vocab_size, size=3).tolist()
+        else:
+            prompt = rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(4, 10))).tolist()
+        work.append((prompt, max_new, seed + 1000 + i, t))
+    return work
+
+
+async def _drive_inproc(front: FrontDoor, workload):
+    """Submit per the arrival schedule; returns (result dicts, makespan_s)."""
+    t0 = time.time()
+
+    async def one(item):
+        prompt, max_new, seed, at = item
+        delay = at - (time.time() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        while True:  # open loop: retry through load-shed, arrival time stands
+            try:
+                ts = await front.submit(prompt, max_new, seed=seed)
+                break
+            except QueueFull:
+                await asyncio.sleep(0.02)
+        await ts.tokens()
+        return dataclasses.asdict(ts.result)
+
+    res = await asyncio.gather(*(one(w) for w in workload))
+    return list(res), time.time() - t0
+
+
+async def _drive_http(srv: HttpFrontDoor, workload):
+    """The same schedule through real sockets: POST /generate + SSE."""
+    t0 = time.time()
+
+    async def one(item):
+        prompt, max_new, seed, at = item
+        delay = at - (time.time() - t0)
+        if delay > 0:
+            await asyncio.sleep(delay)
+        body = json.dumps({"prompt": prompt, "max_new": max_new,
+                           "seed": seed}).encode()
+        reader, writer = await asyncio.open_connection(srv.host, srv.port)
+        try:
+            writer.write(
+                (f"POST /generate HTTP/1.1\r\nHost: {srv.host}\r\n"
+                 f"Content-Type: application/json\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+            await writer.drain()
+            done = None
+            async for ev, payload in read_sse(reader):
+                if ev == "done":
+                    done = payload
+            return done
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    res = await asyncio.gather(*(one(w) for w in workload))
+    return [r for r in res if r is not None], time.time() - t0
+
+
+def bench_load(smoke: bool = True, *, n_requests: int = 12, rate: float = 8.0,
+               max_new: int = 6, backend: str = "integer", slots: int = 4,
+               cache_len: int = 64, prefix_len: int = 12,
+               share_frac: float = 0.5, seed: int = 0, http: bool = False,
+               paged: bool = False, page_len: int = 8):
+    """Returns the {meta, results, ratios} dict written to ``--json``."""
+    cfg = reduced_config(SPIKING_ARCH) if smoke else get_config(SPIKING_ARCH)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    be = get_backend(backend)
+    work = build_workload(cfg, n_requests=n_requests, rate=rate,
+                          max_new=max_new, prefix_len=prefix_len,
+                          share_frac=share_frac, seed=seed)
+    paged_kw = (dict(paged=True, page_len=page_len) if paged else {})
+
+    # ONE scheduler for warmup, offline denominator and the load run —
+    # compiled steps are per-instance, so measuring on a fresh instance
+    # would charge compile time to whichever run goes first
+    sch = BatchScheduler(params, cfg, be, slots=slots, cache_len=cache_len,
+                         **paged_kw)
+
+    def offline():
+        for prompt, mn, s, _at in work:
+            sch.submit(prompt, mn, seed=s)
+        sch.run()
+        return sch.stats
+
+    offline()  # warmup: compiles prefill + batched decode
+    sch.reset()
+    off_st = offline()  # warm offline denominator
+    off_snapshot = {"tokens_per_sec": off_st.tokens_per_sec,
+                    "j_per_token": off_st.j_per_token}
+    sch.reset()
+    front = FrontDoor(sch, max_queue=max(n_requests, 16))
+
+    async def go():
+        if http:
+            async with HttpFrontDoor(front, port=0) as srv:
+                return await _drive_http(srv, work)
+        await front.start()
+        try:
+            return await _drive_inproc(front, work)
+        finally:
+            await front.stop()
+
+    results, makespan = asyncio.run(go())
+    st = sch.stats
+
+    ttfts = [r["ttft_s"] for r in results]
+    gaps = []
+    for r in results:
+        tt = r["token_times"]
+        gaps += [b - a for a, b in zip(tt, tt[1:])]
+    done_tokens = sum(len(r["tokens"]) for r in results)
+    goodput = done_tokens / max(makespan, 1e-9)
+    load_jtok = st.j_per_token
+    step_s = st.decode_s / max(st.decode_steps, 1)
+    p99_ttft = percentile(ttfts, 99)
+    p99_tpot = percentile(gaps, 99)
+
+    mode = ("http" if http else "inproc") + (",paged" if paged else "")
+    results_rows = [{
+        "name": f"serve/{SPIKING_ARCH}[load,{backend},{mode}]",
+        "arch": SPIKING_ARCH, "backend": backend, "slots": slots,
+        "completed": len(results), "tokens_per_sec": goodput,
+        "p50_ttft_s": percentile(ttfts, 50), "p99_ttft_s": p99_ttft,
+        "p50_tpot_s": percentile(gaps, 50), "p99_tpot_s": p99_tpot,
+        "j_per_token": load_jtok,
+        "offline_tokens_per_sec": off_snapshot["tokens_per_sec"],
+        "offline_j_per_token": off_snapshot["j_per_token"],
+        "mean_step_s": step_s, "makespan_s": makespan,
+    }]
+    ratios = {
+        f"load_goodput_rel_offline_{SPIKING_ARCH}":
+            goodput / max(off_snapshot["tokens_per_sec"], 1e-9),
+        f"load_j_per_token_parity_{SPIKING_ARCH}":
+            off_snapshot["j_per_token"] / max(load_jtok, 1e-12),
+        f"load_p99_ttft_steps_inv_{SPIKING_ARCH}":
+            step_s / max(p99_ttft, 1e-9),
+        f"load_p99_tpot_steps_inv_{SPIKING_ARCH}":
+            step_s / max(p99_tpot, 1e-9),
+    }
+    return {
+        "meta": {"smoke": smoke, "n_requests": n_requests, "rate": rate,
+                 "max_new": max_new, "backend": backend, "slots": slots,
+                 "prefix_len": prefix_len, "share_frac": share_frac,
+                 "seed": seed, "http": http, "paged": paged,
+                 "device": jax.devices()[0].platform},
+        "results": results_rows,
+        "ratios": ratios,
+    }
+
+
+def run(fast: bool = True):
+    """benchmarks/run.py entry: (name, us_per_call, derived) rows."""
+    out = bench_load(smoke=fast, rate=200.0)  # saturating: measures capacity
+    rows = []
+    for r in out["results"]:
+        rows.append((r["name"], 1e6 / max(r["tokens_per_sec"], 1e-9),
+                     f"{r['tokens_per_sec']:.1f} tok/s goodput "
+                     f"p99_ttft={r['p99_ttft_s']*1e3:.0f}ms"))
+    for k, v in out["ratios"].items():
+        rows.append((f"serve/ratio/{k}", 0.0, f"{v:.2f}x"))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=False,
+                    help="reduced config (CPU CI)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, req/s")
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--backend", default="integer",
+                    choices=["reference", "integer", "pallas"])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--share-frac", type=float, default=0.5,
+                    help="fraction of requests opening with the shared prefix")
+    ap.add_argument("--http", action="store_true", default=False,
+                    help="drive through real sockets (HTTP POST + SSE)")
+    ap.add_argument("--paged", action="store_true", default=False,
+                    help="paged spike-train KV cache under the front door")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    a = ap.parse_args(argv)
+    out = bench_load(smoke=a.smoke, n_requests=a.requests, rate=a.rate,
+                     max_new=a.max_new, backend=a.backend, slots=a.slots,
+                     share_frac=a.share_frac, seed=a.seed, http=a.http,
+                     paged=a.paged)
+    for r in out["results"]:
+        print(f"{r['name']:44s} {r['tokens_per_sec']:8.1f} tok/s goodput  "
+              f"ttft p50/p99 {r['p50_ttft_s']*1e3:.0f}/{r['p99_ttft_s']*1e3:.0f} ms  "
+              f"tpot p50/p99 {r['p50_tpot_s']*1e3:.0f}/{r['p99_tpot_s']*1e3:.0f} ms  "
+              f"{r['j_per_token']*1e9:.1f} nJ/tok")
+    for k, v in out["ratios"].items():
+        print(f"{'ratio/' + k:44s} {v:8.2f} x")
+    if a.json:
+        with open(a.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[serving_load] wrote {a.json}")
+
+
+if __name__ == "__main__":
+    main()

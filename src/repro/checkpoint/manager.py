@@ -75,21 +75,47 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state, *, blocking: bool = False) -> None:
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
         self.wait()
-        t = threading.Thread(target=self._write, args=(step, host_state), daemon=True)
+        t = threading.Thread(target=self._guarded_write, args=(step, host_state),
+                             daemon=True)
         t.start()
         self._thread = t
         if blocking:
             self.wait()
 
     def wait(self) -> None:
+        """Join the in-flight save; re-raises any exception it hit (a
+        silently dropped checkpoint is worse than a crashed train loop)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _guarded_write(self, step: int, host_state) -> None:
+        try:
+            self._write(step, host_state)
+        except BaseException as e:  # surfaced by the next wait()/save()
+            self._error = e
+
+    @staticmethod
+    def _treedef_hex(host_state) -> Optional[str]:
+        """Proto-serialized treedef, or None for trees with user-defined
+        pytree nodes (e.g. AIMCDeviceState), which the proto can't encode.
+        The manifest treedef is informational — restore() rebuilds the
+        structure from ``state_like`` — so a None here must not fail the
+        save."""
+        try:
+            return jax.tree_util.tree_structure(
+                host_state).serialize_using_proto().hex()
+        except (ValueError, TypeError):
+            return None
 
     def _write(self, step: int, host_state) -> None:
         final = self.dir / f"step_{step:08d}"
@@ -100,7 +126,7 @@ class CheckpointManager:
         leaves, treedef = jax.tree.flatten(host_state)
         manifest = {
             "step": step,
-            "treedef": jax.tree_util.tree_structure(host_state).serialize_using_proto().hex(),
+            "treedef": self._treedef_hex(host_state),
             "leaves": [],
         }
         for i, leaf in enumerate(leaves):

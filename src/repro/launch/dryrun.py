@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this:
@@ -21,6 +18,7 @@ Run the grid:   python -m repro.launch.dryrun --all          (subprocess per cel
 import argparse
 import dataclasses
 import json
+import os
 import re
 import subprocess
 import sys
@@ -340,7 +338,21 @@ def _cell_path(arch, shape, mesh, variant="base") -> Path:
     return OUT_DIR / f"{tag}.json"
 
 
+def _force_host_devices() -> None:
+    """Fake 512 host devices so production meshes build on CPU.
+
+    Must run before the first (lazy, in-function) jax import; every jax
+    touch in this module happens after main() calls this.  Respects an
+    externally set XLA_FLAGS so real-accelerator runs are not clobbered.
+    The ``--all`` grid re-invokes this module per cell via subprocess, so
+    each child sets it for itself too.
+    """
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+
 def main(argv=None):
+    _force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

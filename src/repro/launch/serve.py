@@ -6,6 +6,8 @@
         --page-len 8                            # paged spike-train KV cache
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --program \\
         --drift-step 60 --recal-every 3600      # PCM lifecycle + energy
+    python -m repro.launch.serve --arch xpikeformer-gpt-4-256 --http \\
+        --port 8000                             # HTTP/SSE front door
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     python -m repro.launch.serve --arch xpikeformer-gpt-4-256 \\
         --backend pallas --mesh 2x4             # (data, model) mesh serving
@@ -30,6 +32,11 @@ spiking linears / SSA attention run tensor-parallel over ``model``
 recalibration interval of the drift lifecycle (0 = wall clock / never).
 Per-request energy (measured spike events x Table-II op energies) prints
 with the serve summary.
+
+``--http`` runs the :mod:`repro.server` front door instead of synthetic
+requests: ``POST /generate`` streams tokens over SSE through the same
+scheduler (admission control, per-tenant energy budgets, ``GET /stats``),
+until Ctrl-C; the serve summary (tok/s, J/token) prints on shutdown.
 """
 
 from __future__ import annotations
@@ -68,6 +75,9 @@ def serve(
     paged: bool = False,
     page_len: int = 8,
     n_pages: int = 0,
+    http: bool = False,
+    host: str = "127.0.0.1",
+    port: int = 8000,
 ):
     """Serve ``n_requests`` synthetic prompts; returns their outputs in
     submission order (continuous batching: a finished slot is refilled from
@@ -117,6 +127,9 @@ def serve(
             params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
             pctx=pctx, moe_impl=parallel.moe_impl, drift=drift, **paged_kw,
         )
+    if http:
+        _serve_http(sch, host=host, port=port)
+        return []
     rng = jax.random.PRNGKey(seed + 1)
     prompts: List[jnp.ndarray] = [
         jax.random.randint(jax.random.fold_in(rng, i), (int(4 + 3 * (i % 4)),), 0,
@@ -129,7 +142,7 @@ def serve(
     dt = time.time() - t0
     st = sch.stats
     print(f"[serve] served {st.requests} requests, {st.decoded_tokens} tokens "
-          f"in {dt:.2f}s ({st.decoded_tokens/max(dt,1e-9):.1f} tok/s, "
+          f"in {dt:.2f}s ({st.tokens_per_sec:.1f} tok/s, "
           f"{st.decode_steps} batched decode steps, {st.admissions} admissions)")
     if paged:
         print(f"[serve] pages: peak {st.pages_in_use_peak} in use, "
@@ -137,9 +150,9 @@ def serve(
               f"tokens reused), {st.cow_copies} copy-on-writes, "
               f"peak {st.peak_active_slots} concurrent slots")
     if st.energy_j > 0:
-        per_tok = st.energy_j / max(st.decoded_tokens, 1)
         print(f"[serve] energy: {st.energy_j*1e6:.2f} uJ total "
-              f"({per_tok*1e9:.1f} nJ/token, {st.spike_events:.0f} spike events)")
+              f"({st.j_per_token*1e9:.1f} nJ/token, "
+              f"{st.spike_events:.0f} spike events)")
         worst = max(sch.request_energy_j.items(), key=lambda kv: kv[1])
         print(f"[serve] per-request energy: max rid={worst[0]} "
               f"{worst[1]*1e9:.1f} nJ")
@@ -147,6 +160,42 @@ def serve(
         print(f"[serve] device clock t={st.t_device_s:.1f}s, "
               f"{st.recalibrations} GDC recalibrations")
     return [outs[r] for r in rids]
+
+
+def _serve_http(sch: BatchScheduler, *, host: str, port: int) -> None:
+    """Run the async HTTP/SSE front door over an already-built scheduler
+    until interrupted, then print the usual serve summary."""
+    import asyncio
+
+    from repro.server import FrontDoor, HttpFrontDoor
+
+    async def _run():
+        srv = HttpFrontDoor(FrontDoor(sch), host=host, port=port)
+        await srv.start()
+        print(f"[serve] HTTP front door on http://{srv.host}:{srv.port} "
+              "(POST /generate, GET /stats, GET /healthz); Ctrl-C to stop",
+              flush=True)
+        try:
+            await srv._server.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            await srv.stop()
+
+    t0 = time.time()
+    try:
+        asyncio.run(_run())
+    except KeyboardInterrupt:
+        pass
+    st = sch.stats
+    st.wall_s += time.time() - t0
+    print(f"\n[serve] served {st.requests} requests, {st.decoded_tokens} "
+          f"tokens ({st.tokens_per_sec:.1f} tok/s, {st.decode_steps} batched "
+          f"decode steps, {st.admissions} admissions)")
+    if st.energy_j > 0:
+        print(f"[serve] energy: {st.energy_j*1e6:.2f} uJ total "
+              f"({st.j_per_token*1e9:.1f} nJ/token, "
+              f"{st.spike_events:.0f} spike events)")
 
 
 def main(argv=None):
@@ -169,6 +218,11 @@ def main(argv=None):
     ap.add_argument("--pages", type=int, default=0,
                     help="physical page-pool size (--paged; 0 = slots x "
                          "cache_len / page_len + reserved)")
+    ap.add_argument("--http", action="store_true", default=False,
+                    help="serve over HTTP/SSE (POST /generate streams "
+                         "tokens) instead of running synthetic requests")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     ap.add_argument("--program", action="store_true", default=False,
                     help="program spiking linears onto simulated PCM first")
@@ -181,7 +235,8 @@ def main(argv=None):
           max_new=a.max_new, cache_len=a.cache_len, backend=a.backend,
           program=a.program, drift_step_s=a.drift_step,
           recal_every_s=a.recal_every, mesh_spec=a.mesh, paged=a.paged,
-          page_len=a.page_len, n_pages=a.pages)
+          page_len=a.page_len, n_pages=a.pages, http=a.http, host=a.host,
+          port=a.port)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Production front door: async streaming HTTP/SSE serving with SLO- and
+energy-aware admission control.
+
+Layering (transport down to silicon)::
+
+    HttpFrontDoor   — stdlib asyncio HTTP/1.1 + SSE   (repro.server.http)
+        |
+    FrontDoor       — async request queue, streaming, preemption/resume
+        |             (repro.server.frontdoor)
+    AdmissionController — per-tenant priorities, token-budget fairness,
+        |             joule buckets (energy SLOs), decision records
+        |             (repro.server.admission)
+    BatchScheduler  — the existing continuous-batching scheduler
+                      (repro.serving): dense or paged, single-device or
+                      mesh; tokens stay a pure f(params, prompt, seed), so
+                      the whole async stack is differentially testable
+                      against a direct in-process run.
+"""
+
+from repro.server.admission import (
+    AdmissionController,
+    AdmissionRecord,
+    TenantPolicy,
+)
+from repro.server.frontdoor import (
+    FrontDoor,
+    QueueFull,
+    RequestResult,
+    TokenStream,
+)
+from repro.server.http import HttpFrontDoor, read_sse
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionRecord",
+    "TenantPolicy",
+    "FrontDoor",
+    "QueueFull",
+    "RequestResult",
+    "TokenStream",
+    "HttpFrontDoor",
+    "read_sse",
+]

@@ -117,6 +117,12 @@ class ServeStats:
         return self.decoded_tokens / max(self.wall_s, 1e-9)
 
     @property
+    def j_per_token(self) -> float:
+        """Metered joules per decoded token (0.0 when nothing was metered —
+        non-spiking archs book no energy)."""
+        return self.energy_j / max(self.decoded_tokens, 1)
+
+    @property
     def decode_tokens_per_sec(self) -> float:
         """Decode-phase throughput: tokens per second spent inside the
         batched ``decode_step`` — the batching win, independent of how
@@ -539,6 +545,50 @@ class BatchScheduler:
             self.stats.peak_active_slots,
             sum(r is not None for r in self._slot_req))
         return admitted
+
+    def free_slots(self) -> int:
+        """Slots not currently holding a request (queued submissions are
+        *not* counted — they only claim a slot at the next ``step()``'s
+        admission; see :meth:`queued_requests`)."""
+        return sum(r is None for r in self._slot_req)
+
+    def queued_requests(self) -> List[Request]:
+        """Submitted-but-not-yet-admitted requests, FIFO order (the front
+        door reads this to budget slots/pages it has already committed)."""
+        return list(self._queue)
+
+    def slot_of(self, rid: int) -> Optional[int]:
+        """The slot currently decoding request ``rid`` (None when the
+        request is queued, finished, or unknown)."""
+        for slot, req in enumerate(self._slot_req):
+            if req is not None and req.rid == rid:
+                return slot
+        return None
+
+    def preempt(self, rid: int) -> Request:
+        """Yank request ``rid`` out of the server — release its slot (or
+        drop it from the queue) and forget its collected output — and
+        return the :class:`Request` so the caller controls re-admission.
+
+        Unlike ``evict(slot, requeue=True)`` (which re-queues internally
+        and re-admits at the very next step), preemption hands scheduling
+        *back to the caller*: the front door re-submits the same (prompt,
+        max_new, seed) when the tenant's energy bucket refills, and token
+        purity makes the restarted decode bit-identical — already-streamed
+        tokens replay exactly.  Energy already booked to ``rid`` stays
+        booked (preemption does not refund the joules it wasted)."""
+        slot = self.slot_of(rid)
+        if slot is not None:
+            req = self._slot_req[slot]
+            self.evict(slot)
+            self.outputs.pop(rid, None)
+            return req
+        for req in self._queue:
+            if req.rid == rid:
+                self._queue.remove(req)
+                self.outputs.pop(rid, None)
+                return req
+        raise ValueError(f"preempt of unknown/finished request rid={rid}")
 
     def evict(self, slot: int, requeue: bool = False) -> None:
         """Release a slot's state (zero or refcount-release cache pages,

@@ -76,6 +76,64 @@ def test_elastic_restore_new_mesh(tmp_path, rng):
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
 
 
+def test_aimc_device_state_roundtrip_decode_exact(tmp_path, rng):
+    """Save -> restore a *programmed, aged* AIMC device tree; restored
+    params must decode bit-exactly on the integer backend.
+
+    Regression coverage for two silent-save bugs: trees containing
+    user-defined pytree nodes (AIMCDeviceState) crashed the manifest's
+    proto treedef serialization, and the async save thread swallowed the
+    exception — the checkpoint just never appeared."""
+    from repro import aimc_device as AD
+    from repro.engine import get_backend
+    from repro.models import transformer as T
+    from repro.serving import BatchScheduler
+
+    cfg = reduced_config("xpikeformer-gpt-4-256")
+    params = T.init_params(rng, cfg)
+    acfg = AD.AIMCConfig()
+    dev = AD.program_lm_tree(jax.random.fold_in(rng, 1), params, acfg)
+    dev = AD.drift_tree(dev, 3600.0, cfg=acfg)  # an hour of conductance drift
+    assert AD.has_device_state(dev)
+
+    mgr = CheckpointManager(tmp_path, keep=1)
+    mgr.save(11, dev, blocking=True)  # wait() inside re-raises write errors
+    manifest = json.loads(
+        (tmp_path / "step_00000011" / "manifest.json").read_text())
+    assert manifest["treedef"] is None  # user-defined nodes: best-effort only
+    restored, step = mgr.restore(dev)
+    assert step == 11
+    for a, b in zip(jax.tree.leaves(dev), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+    def decode(p):
+        sch = BatchScheduler(p, cfg, get_backend("integer"), slots=1,
+                             cache_len=16)
+        r = sch.submit([3, 4, 5, 6], 4, seed=5)
+        return sch.run()[r]
+
+    assert decode(restored) == decode(dev)
+
+
+def test_save_thread_errors_surface_in_wait(tmp_path, rng, monkeypatch):
+    """A background save that dies must raise at the next wait(), not
+    vanish."""
+    mgr = CheckpointManager(tmp_path, keep=1)
+
+    def boom(step, host_state):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(1, {"w": jnp.zeros(3)})
+    with pytest.raises(OSError, match="disk on fire"):
+        mgr.wait()
+    # the error is consumed: the manager stays usable for the next save
+    monkeypatch.undo()
+    mgr.save(2, {"w": jnp.zeros(3)}, blocking=True)
+    assert mgr.latest_step() == 2
+
+
 def test_resharding_plan_reports(rng):
     cfg = reduced_config("yi-9b")
     m1 = make_test_mesh((1, 1))
