@@ -44,8 +44,8 @@ def check(current: dict, baseline: dict, tolerance: float, absolute: bool):
         base_by = {r["name"]: r for r in baseline.get("results", [])}
         for r in current.get("results", []):
             b = base_by.get(r["name"])
-            if b is None:
-                continue
+            if b is None or "tokens_per_sec" not in r or "tokens_per_sec" not in b:
+                continue  # kernel-time rows gate via ratios only
             floor = b["tokens_per_sec"] * (1.0 - tolerance)
             status = "OK" if r["tokens_per_sec"] >= floor else "REGRESSED"
             report.append(

@@ -39,7 +39,7 @@ partitioned by GSPMD only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple, Union
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,8 @@ from repro.aimc_device import AIMCDeviceState
 from repro.core import aimc as AM
 from repro.kernels import ops as KOPS
 from repro.kernels import ref as KREF
+from repro.engine import _DecodeShims
+from repro.kernels.plan import KVView
 # single source of the jax.shard_map / jax.experimental shim
 from repro.models.moe import _shard_map
 
@@ -112,12 +114,12 @@ def _state_specs(col: bool, axis: str, lead: int = 0) -> AIMCDeviceState:
                            t_seconds=sc, gdc_gain=sc, levels_t=mat, img_inv=sc)
 
 
-class ShardedBackend:
+class ShardedBackend(_DecodeShims):
     """Tensor-parallel wrapper over a bit-exact engine backend.
 
     Implements the :class:`repro.engine.Backend` protocol; the mesh-aware
-    entry points (``part=`` on ``spiking_linear``, ``h0=`` on
-    ``ssa_attention_decode``) select the shard_map decomposition.  Two
+    entry points (``part=`` on ``spiking_linear``, ``spec.h0`` on
+    ``decode_attention``) select the shard_map decomposition.  Two
     instances serve a mesh scheduler: the *decode* instance additionally
     shards the slot/batch dimension over ``data`` (``batch_axis="data"``);
     the *prefill* instance replicates it (prefill is batch-1).
@@ -144,6 +146,10 @@ class ShardedBackend:
             cfg, sizes.get(model_axis, 1) if self.model_axis else 1)
         self.name = f"sharded[{inner.name}]"
         self.bit_exact = inner.bit_exact
+        # only offer the fused megakernel when the inner backend has it —
+        # build_decode_plan keys "auto" off this being callable
+        if not callable(getattr(inner, "decode_layer_fused", None)):
+            self.decode_layer_fused = None
 
     # -- spec helpers ---------------------------------------------------
 
@@ -170,57 +176,119 @@ class ShardedBackend:
 
     # -- head-parallel SSA decode --------------------------------------
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max,
-                             h0: Union[int, Array] = 0):
+    def decode_attention(self, view, q, spec, *, slot_keys):
+        """Head-parallel SSA decode over a :class:`~repro.kernels.plan.
+        KVView`: each shard runs the inner backend's decode over its own
+        heads, drawing comparator integers from the per-``(seed, pos,
+        global head)`` streams (``spec.h0`` plus the shard's
+        ``lax.axis_index`` offset) — exactly the integers the single-device
+        oracle draws for those heads.  A paged view's page axis is never
+        sharded (pages are global); only the KV-head axis rides ``model``;
+        slots ride ``data``."""
         h = q.shape[2]
         if self.model_axis is None or not self.plan.heads or h % self.plan.tp:
-            return self.inner.ssa_attention_decode(slot_keys, q, k, v,
-                                                   i_max=i_max, h0=h0)
-        axis = self.model_axis
-        h_local = h // self.plan.tp
-        b = self._batch(q.shape[1])
-        kv_spec = P(None, b, axis, None, None)
-
-        def body(sk, qb, kb, vb):
-            off = jnp.asarray(h0) + lax.axis_index(axis) * h_local
-            return self.inner.ssa_attention_decode(sk, qb, kb, vb,
-                                                   i_max=i_max, h0=off)
-
-        return _shard_map(
-            body, mesh=self.mesh,
-            in_specs=(P(b), kv_spec, kv_spec, kv_spec),
-            out_specs=kv_spec,
-        )(slot_keys, q, k, v)
-
-    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
-                                   page_table, *, i_max,
-                                   h0: Union[int, Array] = 0):
-        """Head-parallel paged SSA decode: each shard gathers its own KV
-        heads' pages through the (replicated) page table and draws the
-        single-device oracle's comparator integers for its global heads —
-        the paged mirror of :meth:`ssa_attention_decode`.  The page axis of
-        the pool is never sharded (pages are global), only the KV-head axis
-        rides ``model``; slots ride ``data``."""
-        h = q.shape[2]
-        if self.model_axis is None or not self.plan.heads or h % self.plan.tp:
-            return self.inner.ssa_attention_decode_paged(
-                slot_keys, q, kpool, vpool, page_table, i_max=i_max, h0=h0)
+            return self.inner.decode_attention(view, q, spec,
+                                               slot_keys=slot_keys)
         axis = self.model_axis
         h_local = h // self.plan.tp
         b = self._batch(q.shape[1])
         q_spec = P(None, b, axis, None, None)
-        pool_spec = P(None, None, axis, None, None)  # [P, T, KV, page_len, d]
 
-        def body(sk, qb, kb, vb, tb):
-            off = jnp.asarray(h0) + lax.axis_index(axis) * h_local
-            return self.inner.ssa_attention_decode_paged(
-                sk, qb, kb, vb, tb, i_max=i_max, h0=off)
+        def off():
+            return jnp.asarray(spec.h0) + lax.axis_index(axis) * h_local
+
+        if view.paged:
+            pool_spec = P(None, None, axis, None, None)  # [P,T,KV,page_len,d]
+
+            def body(sk, qb, kb, vb, tb):
+                sub = dataclasses.replace(spec, h0=off())
+                return self.inner.decode_attention(
+                    KVView.from_pool(kb, vb, tb), qb, sub, slot_keys=sk)
+
+            return _shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(b), q_spec, pool_spec, pool_spec, P(b, None)),
+                out_specs=q_spec,
+            )(slot_keys, q, view.k, view.v, view.page_table)
+
+        def body(sk, qb, kb, vb):  # dense k/v [T,B,H,L,d]: head axis shards
+            sub = dataclasses.replace(spec, h0=off())
+            return self.inner.decode_attention(
+                KVView.dense(kb, vb), qb, sub, slot_keys=sk)
 
         return _shard_map(
             body, mesh=self.mesh,
-            in_specs=(P(b), q_spec, pool_spec, pool_spec, P(b, None)),
+            in_specs=(P(b), q_spec, q_spec, q_spec),
             out_specs=q_spec,
-        )(slot_keys, q, kpool, vpool, page_table)
+        )(slot_keys, q, view.k, view.v)
+
+    # -- head-parallel fused decode layer ------------------------------
+
+    def decode_layer_fused(self, slot_keys, s, view, pos, wq, wk, wv,
+                           wo=None, wi=None, wo2=None, *, hd, h0=0,
+                           write_pids=None, with_tail=True, with_mlp=True,
+                           sim=None):
+        """Head-parallel shard of the fused decode megakernel.
+
+        The attention stage (projections + packed SSA) runs inside
+        ``shard_map`` with ``with_tail=False``: each shard launches the
+        inner backend's megakernel over its own ``h_local`` query heads
+        (column-sliced ``wq``/``wk``/``wv``; per-column quantisation is
+        shard-local-exact) at global head offset ``h0 + axis_index *
+        h_local``, producing its slice of the attention spikes and its own
+        KV heads' new trains.  The FFN tail then rides the existing
+        row/col-parallel spiking linears *outside* the shard_map — the
+        row path psums integer spike counts and fires LIF once, which is
+        bit-identical to the fused kernel's tail (same committed
+        roundings), so sharded-fused == single-device-fused exactly."""
+        from repro import engine as E
+
+        kvh = view.k.shape[2] if view.paged else view.k.shape[3]
+        tp_ok = (self.model_axis is not None and self.plan.heads
+                 and kvh % self.plan.tp == 0)
+        if not tp_ok:
+            return self.inner.decode_layer_fused(
+                slot_keys, s, view, pos, wq, wk, wv, wo, wi, wo2, hd=hd,
+                h0=h0, write_pids=write_pids, with_tail=with_tail,
+                with_mlp=with_mlp, sim=sim)
+        axis = self.model_axis
+        # normalise the projection leaves so operands and specs agree on
+        # the pytree shape (shard_map in_specs must mirror the operands)
+        pq, pk, pv = (E._linear_parts(w) for w in (wq, wk, wv))
+        h = _mat_dims(pq)[1] // hd
+        h_local = h // self.plan.tp
+        b = self._batch(s.shape[1])
+        if view.paged:
+            kv_spec = P(None, None, axis, None, None)  # [P,T,KV,page_len,hd]
+            view_spec = KVView.from_pool(kv_spec, kv_spec, P(b, None))
+        else:
+            kv_spec = P(b, None, None, axis, None)  # [B,T,L,KV,hd]
+            view_spec = KVView.dense(kv_spec, kv_spec)
+        wp_specs = (P(b),) if write_pids is not None else ()
+        wp_args = (write_pids,) if write_pids is not None else ()
+
+        def body(sk, sb, vw, ps, wq_, wk_, wv_, *rest):
+            off = jnp.asarray(h0) + lax.axis_index(axis) * h_local
+            return self.inner.decode_layer_fused(
+                sk, sb, vw, ps, wq_, wk_, wv_, hd=hd, h0=off,
+                write_pids=rest[0] if rest else None,
+                with_tail=False, sim=sim)
+
+        a, k_new, v_new = _shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(b), P(None, b, None), view_spec, P(b),
+                      self._p_specs(pq, col=True), self._p_specs(pk, col=True),
+                      self._p_specs(pv, col=True)) + wp_specs,
+            out_specs=(P(None, b, axis), P(None, b, axis, None),
+                       P(None, b, axis, None)),
+        )(slot_keys, s, view, pos, pq, pk, pv, *wp_args)
+        if not with_tail:
+            return a, k_new, v_new
+        s1 = s + self.spiking_linear(None, wo, a, sim, part="row")
+        if with_mlp:
+            h1 = self.spiking_linear(None, wi, s1, sim, part="col")
+            s1 = s1 + self.spiking_linear(None, wo2, h1, sim, part="row")
+        return s1, k_new, v_new
 
     # -- tensor-parallel spiking linear --------------------------------
 

@@ -282,7 +282,8 @@ class Executor:
 
     def scheduler(self, *, slots: int = 4, cache_len: int = 64, drift=None,
                   paged: bool = False, page_len: int = 8,
-                  n_pages: Optional[int] = None):
+                  n_pages: Optional[int] = None,
+                  decode_kernel: str = "auto"):
         """A mesh-sharded :class:`repro.serving.BatchScheduler`: slots are
         data-parallel, the decode math is tensor-parallel, admission /
         eviction / energy metering work exactly as on one device
@@ -292,7 +293,8 @@ class Executor:
         warm across :meth:`serve` calls."""
         from repro.serving import BatchScheduler
 
-        key = (slots, cache_len, paged) + ((page_len, n_pages) if paged else ())
+        key = (slots, cache_len, paged, decode_kernel) + (
+            (page_len, n_pages) if paged else ())
         sch = self._schedulers.get(key)
         if sch is not None:
             sch.reset()
@@ -303,7 +305,7 @@ class Executor:
             self.params, self.cfg, self.decode_backend, slots=slots,
             cache_len=cache_len, pctx=self.pctx, moe_impl=self.moe_impl,
             drift=drift, placement=self, paged=paged, page_len=page_len,
-            n_pages=n_pages,
+            n_pages=n_pages, decode_kernel=decode_kernel,
         )
         self._schedulers[key] = sch
         return sch
@@ -311,10 +313,11 @@ class Executor:
     def serve(self, prompts, max_new: int = 16, *, slots: int = 4,
               cache_len: int = 64, seed: int = 0, drift=None,
               paged: bool = False, page_len: int = 8,
-              n_pages: Optional[int] = None):
+              n_pages: Optional[int] = None, decode_kernel: str = "auto"):
         """Continuous-batching serve on the mesh -> (outputs, ServeStats)."""
         sch = self.scheduler(slots=slots, cache_len=cache_len, drift=drift,
-                             paged=paged, page_len=page_len, n_pages=n_pages)
+                             paged=paged, page_len=page_len, n_pages=n_pages,
+                             decode_kernel=decode_kernel)
         rids = [sch.submit(p, max_new, seed=seed + i)
                 for i, p in enumerate(prompts)]
         outs = sch.run()

@@ -43,6 +43,7 @@ Serving (generic LM-stack archs, ``task="lm"``)::
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Protocol, Union, runtime_checkable
 
 import jax
@@ -55,8 +56,10 @@ from repro.core import spikes as SP
 from repro.core import ssa as SSA
 from repro.core import spiking_transformer as ST
 from repro.core.spiking_transformer import AIMCSim, SpikingConfig
+from repro.kernels import decode_fused as KFD
 from repro.kernels import ops as KOPS
 from repro.kernels import ref as KREF
+from repro.kernels.plan import AttnSpec, KVView
 
 Array = jax.Array
 
@@ -87,44 +90,35 @@ class Backend(Protocol):
         """Stochastic spiking attention over ``[T,B,H,N,d]`` spike trains."""
         ...
 
-    def ssa_attention_decode(self, slot_keys: Array, q: Array, k: Array,
-                             v: Array, *, i_max: int,
-                             h0: Union[int, Array] = 0) -> Array:
+    def decode_attention(self, view: KVView, q: Array, spec: AttnSpec, *,
+                         slot_keys: Array) -> Array:
         """One-query SSA decode against cached KV spike trains (serving).
 
-        ``q [T,B,H,1,d]`` is the token being decoded; ``k``/``v``
-        ``[T,B,H,L,d]`` are the slot's cached spike trains, zero beyond the
-        slot's position (zero spikes never beat a comparator draw, so
-        validity masking is implicit).  ``slot_keys [B,2]`` are per-slot
-        uint32 PRNG keys: every slot draws its own comparator integers so
-        continuous-batching admission cannot perturb running slots; within
-        a slot every head draws from ``f(seed, pos, global head index)``.
-        ``i_max`` is the output comparator range — the cache capacity (the
-        hardware tile dimension), fixed regardless of fill level.
+        The single decode surface: ``view`` is the K/V storage union —
+        dense slot caches (``k``/``v [T,B,H,L,d]``, zero beyond each
+        slot's position; zero spikes never beat a comparator draw, so
+        validity masking is implicit) or a block-paged pool
+        (``k``/``v [P,T,KV,page_len,d]`` plus ``page_table [B,MP]``;
+        entry 0 is the permanently-zero null page, and GQA repeat happens
+        inside the backend).  ``q [T,B,H,1,d]`` is the token being
+        decoded.  ``spec`` carries the static geometry: ``i_max`` is the
+        output comparator range — the *logical* cache capacity (the
+        hardware tile dimension), fixed regardless of fill level and
+        layout, so dense and paged decode draw identical streams;
+        ``spec.h0`` is the mesh-aware entry point — a tensor-parallel
+        shard that owns heads ``[h0, h0+H)`` passes its global head
+        offset (possibly traced) and draws exactly the single-device
+        oracle's integers for those heads (see
+        :class:`repro.distributed.ShardedBackend`).
 
-        ``h0`` is the mesh-aware entry point: a tensor-parallel shard that
-        owns heads ``[h0, h0+H)`` passes its global head offset (possibly
-        traced) and draws exactly the single-device oracle's integers for
-        those heads (see :class:`repro.distributed.ShardedBackend`)."""
-        ...
+        ``slot_keys [B,2]`` are per-slot uint32 PRNG keys: every slot
+        draws its own comparator integers so continuous-batching
+        admission cannot perturb running slots; within a slot every head
+        draws from ``f(seed, pos, global head index)``.
 
-    def ssa_attention_decode_paged(self, slot_keys: Array, q: Array,
-                                   kpool: Array, vpool: Array,
-                                   page_table: Array, *, i_max: int,
-                                   h0: Union[int, Array] = 0) -> Array:
-        """One-query SSA decode against a *block-paged* KV spike pool.
-
-        The paged-serving counterpart of :meth:`ssa_attention_decode`:
-        ``kpool``/``vpool [P, T, KV, page_len, d]`` are global physical
-        page pools shared by every slot, and ``page_table [B, MP]`` maps
-        slot ``b``'s logical block ``j`` to a physical page (entry 0 is
-        the permanently-zero null page — unallocated blocks read as zero
-        spikes and mask themselves out of the comparators).  GQA repeat
-        happens inside the backend (pools carry KV heads).  The comparator
-        PRNs are drawn at the *logical* geometry ``L = MP * page_len``
-        with the same per-(slot, pos, global head) streams as the dense
-        method, so for identical logical cache content paged and dense
-        decode are bit-identical on the bit-exact substrates."""
+        The pre-PR-7 ``ssa_attention_decode`` / ``ssa_attention_decode_
+        paged`` methods survive as deprecation shims (bit-exact
+        forwarders) on every bundled backend."""
         ...
 
     def lif(self, currents: Array, *, beta: float = 0.5,
@@ -207,12 +201,51 @@ def _flatten_time(spikes: Array):
     return flat, unflatten
 
 
+def _w_triple(p: Any, sim: AIMCSim):
+    """Linear param leaf -> the fused kernels' (levels, scale, bias) triple."""
+    parts = _linear_parts(p)
+    levels, scale = _levels_scale(parts, sim)
+    return (levels, scale, parts.get("b"))
+
+
+class _DecodeShims:
+    """The pre-PR-7 decode surface, forwarding to :meth:`decode_attention`.
+
+    ``ssa_attention_decode`` / ``ssa_attention_decode_paged`` and their
+    ``i_max``/``h0``/pool-vs-dense positional soup are deprecated: the one
+    decode surface is ``decode_attention(view, q, spec)``.  These shims
+    forward bit-exactly (asserted by the test suite) and warn once per
+    trace site."""
+
+    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
+        warnings.warn(
+            "Backend.ssa_attention_decode is deprecated; use "
+            "decode_attention(KVView.dense(k, v), q, AttnSpec(i_max, h0))",
+            DeprecationWarning, stacklevel=2)
+        return self.decode_attention(
+            KVView.dense(k, v), q, AttnSpec(i_max=i_max, h0=h0),
+            slot_keys=slot_keys)
+
+    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
+                                   page_table, *, i_max, h0=0):
+        warnings.warn(
+            "Backend.ssa_attention_decode_paged is deprecated; use "
+            "decode_attention(KVView.from_pool(kpool, vpool, page_table), "
+            "q, AttnSpec(i_max, h0, groups))",
+            DeprecationWarning, stacklevel=2)
+        return self.decode_attention(
+            KVView.from_pool(kpool, vpool, page_table), q,
+            AttnSpec(i_max=i_max, h0=h0,
+                     groups=q.shape[2] // kpool.shape[2]),
+            slot_keys=slot_keys)
+
+
 # ---------------------------------------------------------------------------
 # Reference backend — differentiable float path (training)
 # ---------------------------------------------------------------------------
 
 
-class ReferenceBackend:
+class ReferenceBackend(_DecodeShims):
     """Float ops + straight-through Bernoulli/Heaviside surrogates.
 
     The only backend usable under ``jax.grad``; also the only one that
@@ -226,7 +259,12 @@ class ReferenceBackend:
     def ssa_attention(self, key, q, k, v, *, causal=False):
         return SSA.ssa_attention(key, q, k, v, causal=causal)
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
+    def decode_attention(self, view, q, spec, *, slot_keys):
+        if view.paged:
+            k, v = _gather_paged_kv(q, view.k, view.v, view.page_table)
+        else:
+            k, v = view.k, view.v
+        i_max, h0 = spec.i_max, spec.h0
         d = q.shape[-1]
         heads = jnp.asarray(h0) + jnp.arange(q.shape[2])
 
@@ -250,11 +288,6 @@ class ReferenceBackend:
         return jax.vmap(per_slot, in_axes=(0, 1, 1, 1), out_axes=1)(
             slot_keys, q, k, v
         )
-
-    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
-                                   page_table, *, i_max, h0=0):
-        k, v = _gather_paged_kv(q, kpool, vpool, page_table)
-        return self.ssa_attention_decode(slot_keys, q, k, v, i_max=i_max, h0=h0)
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         return SP.lif(currents, SP.LIFParams(beta=beta, v_thresh=v_thresh))
@@ -290,13 +323,14 @@ class ReferenceBackend:
 # ---------------------------------------------------------------------------
 
 
-class IntegerBackend:
+class IntegerBackend(_DecodeShims):
     """Bit-faithful integer simulation of the SSA engine's digital datapath.
 
     Draws the comparator PRNs with the exact convention the pallas backend
     uses (:func:`repro.kernels.ops.draw_comparator_prns`), so the two are
     bit-identical given the same key — this backend is the correctness
-    contract the kernels are validated against."""
+    contract the kernels are validated against (including the fused
+    decode-layer oracle, :meth:`decode_layer_fused`)."""
 
     name = "integer"
     differentiable = False
@@ -312,12 +346,24 @@ class IntegerBackend:
         )
         return out.reshape(t, b, h, n, d)
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
+    def decode_attention(self, view, q, spec, *, slot_keys):
         t, b, h, n1, d = q.shape
+        if view.paged:
+            l = view.page_table.shape[1] * view.k.shape[3]
+            # identical streams to the dense layout (bit-exact across modes)
+            rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d,
+                                                spec.i_max, spec.h0)
+            out = KREF.ssa_decode_paged_ref(
+                jnp.moveaxis(q, 1, 0), view.k, view.v, view.page_table,
+                rs.reshape(b, t, h, 1, l), ra.reshape(b, t, h, 1, d),
+            )
+            return jnp.moveaxis(out, 0, 1)
+        k, v = view.k, view.v
         l = k.shape[3]
         # same per-(slot, head) PRN convention as the pallas wrapper
-        # (bit-exactness); h0 offsets the head streams for TP shards
-        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d, i_max, h0)
+        # (bit-exactness); spec.h0 offsets the head streams for TP shards
+        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d,
+                                            spec.i_max, spec.h0)
         g = b * t * h
         out = KREF.ssa_decode_ref(
             jnp.moveaxis(q, 1, 0).reshape(g, 1, d),
@@ -327,17 +373,36 @@ class IntegerBackend:
         )
         return jnp.moveaxis(out.reshape(b, t, h, 1, d), 0, 1)
 
-    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
-                                   page_table, *, i_max, h0=0):
-        t, b, h, n1, d = q.shape
-        l = page_table.shape[1] * kpool.shape[3]
-        # identical streams to the dense method (bit-exactness across modes)
-        rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, d, i_max, h0)
-        out = KREF.ssa_decode_paged_ref(
-            jnp.moveaxis(q, 1, 0), kpool, vpool, page_table,
-            rs.reshape(b, t, h, 1, l), ra.reshape(b, t, h, 1, d),
-        )
-        return jnp.moveaxis(out, 0, 1)
+    def decode_layer_fused(self, slot_keys, s, view, pos, wq, wk, wv,
+                           wo=None, wi=None, wo2=None, *, hd, h0=0,
+                           write_pids=None, with_tail=True, with_mlp=True,
+                           sim=None):
+        """Fused-layer oracle: one decoder layer step, composed from the
+        per-primitive reference oracles (see
+        :func:`repro.kernels.ref.decode_layer_ref`).  The contract the
+        pallas megakernel is fuzzed against; integer-fused ==
+        integer-unfused by construction."""
+        sim = sim or _IDEAL_SIM
+
+        def tri(w):
+            return None if w is None else _w_triple(w, sim)
+
+        t, b, _ = s.shape
+        wq = tri(wq)
+        h = wq[0].shape[1] // hd
+        if view.paged:
+            l = view.page_table.shape[1] * view.k.shape[3]
+            rs4, ra4 = KFD.draw_layer_prns(slot_keys, t, h, l, hd, h0)
+            return KREF.decode_layer_paged_ref(
+                s, view.k, view.v, view.page_table, pos, write_pids,
+                wq, tri(wk), tri(wv), tri(wo), tri(wi), tri(wo2), rs4, ra4,
+                hd=hd, with_tail=with_tail, with_mlp=with_mlp)
+        l = view.k.shape[2]
+        rs4, ra4 = KFD.draw_layer_prns(slot_keys, t, h, l, hd, h0)
+        return KREF.decode_layer_ref(
+            s, view.k, view.v, pos, wq, tri(wk), tri(wv), tri(wo), tri(wi),
+            tri(wo2), rs4, ra4, hd=hd, with_tail=with_tail,
+            with_mlp=with_mlp)
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         t = currents.shape[0]
@@ -361,7 +426,7 @@ class IntegerBackend:
 # ---------------------------------------------------------------------------
 
 
-class PallasBackend:
+class PallasBackend(_DecodeShims):
     """The accelerated engine: popcount SSA + fused LIF/crossbar kernels.
 
     ``interpret=True`` executes the kernel bodies through the Pallas
@@ -383,17 +448,39 @@ class PallasBackend:
             q, k, v, key, causal=causal, interpret=self.interpret
         )
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
+    def decode_attention(self, view, q, spec, *, slot_keys):
+        if view.paged:
+            return KOPS.ssa_attention_decode_paged_packed(
+                q, view.k, view.v, view.page_table, slot_keys, spec.h0,
+                i_max=spec.i_max, interpret=self.interpret,
+            )
         return KOPS.ssa_attention_decode_packed(
-            q, k, v, slot_keys, h0, i_max=i_max, interpret=self.interpret
-        )
-
-    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
-                                   page_table, *, i_max, h0=0):
-        return KOPS.ssa_attention_decode_paged_packed(
-            q, kpool, vpool, page_table, slot_keys, h0, i_max=i_max,
+            q, view.k, view.v, slot_keys, spec.h0, i_max=spec.i_max,
             interpret=self.interpret,
         )
+
+    def decode_layer_fused(self, slot_keys, s, view, pos, wq, wk, wv,
+                           wo=None, wi=None, wo2=None, *, hd, h0=0,
+                           write_pids=None, with_tail=True, with_mlp=True,
+                           sim=None):
+        """One megakernel launch per decoder layer step (the PR-7 tentpole):
+        packed-VMEM SSA + fused projections/FFN, dense or paged per the
+        view; bit-exact vs :meth:`IntegerBackend.decode_layer_fused`."""
+        sim = sim or _IDEAL_SIM
+
+        def tri(w):
+            return None if w is None else _w_triple(w, sim)
+
+        if view.paged:
+            return KFD.fused_decode_layer_paged(
+                slot_keys, s, view.k, view.v, view.page_table, pos,
+                write_pids, tri(wq), tri(wk), tri(wv), tri(wo), tri(wi),
+                tri(wo2), h0, hd=hd, with_tail=with_tail, with_mlp=with_mlp,
+                interpret=self.interpret)
+        return KFD.fused_decode_layer(
+            slot_keys, s, view.k, view.v, pos, tri(wq), tri(wk), tri(wv),
+            tri(wo), tri(wi), tri(wo2), h0, hd=hd, with_tail=with_tail,
+            with_mlp=with_mlp, interpret=self.interpret)
 
     def lif(self, currents, *, beta=0.5, v_thresh=1.0):
         return KOPS.lif_fused(
@@ -418,7 +505,7 @@ class PallasBackend:
 # ---------------------------------------------------------------------------
 
 
-class MeteringBackend:
+class MeteringBackend(_DecodeShims):
     """Wraps any backend and meters energy from **measured** spike counts.
 
     Every primitive call records its operand/output spike events and
@@ -456,43 +543,31 @@ class MeteringBackend:
         self.report.calls += 1
         return out
 
-    def ssa_attention_decode(self, slot_keys, q, k, v, *, i_max, h0=0):
+    def decode_attention(self, view, q, spec, *, slot_keys):
         from repro.energy import model as EM
 
-        out = self.inner.ssa_attention_decode(slot_keys, q, k, v, i_max=i_max,
-                                              h0=h0)
+        out = self.inner.decode_attention(view, q, spec, slot_keys=slot_keys)
         t, b, h, n, d = q.shape
-        l = k.shape[3]
-        qs, ks, vs = self._count(q), self._count(k), self._count(v)
-        e = EM.meter_ssa(t, b * h, n, l, d, qs / q.size, ks / k.size,
-                         vs / v.size)
-        self.report.ssa_pj += e["ssa"]
-        self.report.spikes_in += qs + ks + vs
-        self.report.spikes_out += self._count(out)
-        self.report.calls += 1
-        return out
-
-    def ssa_attention_decode_paged(self, slot_keys, q, kpool, vpool,
-                                   page_table, *, i_max, h0=0):
-        from repro.energy import model as EM
-
-        out = self.inner.ssa_attention_decode_paged(
-            slot_keys, q, kpool, vpool, page_table, i_max=i_max, h0=h0)
-        t, b, h, n, d = q.shape
-        mp, kv = page_table.shape[1], kpool.shape[2]
-        pl_ = kpool.shape[3]
-        l = mp * pl_
-        rep = h // kv
-        # meter the *logical* gathered K/V the tile streams, without ever
-        # materialising it: per-page spike totals indexed through the page
-        # table give the gathered count at O(pool) cost, and the GQA
-        # repeat is a plain multiplier on count and size alike
-        kc = jnp.sum(kpool.astype(jnp.float32), axis=(1, 2, 3, 4))  # [P]
-        vc = jnp.sum(vpool.astype(jnp.float32), axis=(1, 2, 3, 4))
-        qs = self._count(q)
-        ks = rep * float(jnp.sum(kc[page_table]))
-        vs = rep * float(jnp.sum(vc[page_table]))
-        kv_size = b * t * rep * kv * l * d  # the dense gathered view's size
+        if view.paged:
+            kpool, vpool, page_table = view.k, view.v, view.page_table
+            mp, kv = page_table.shape[1], kpool.shape[2]
+            l = mp * kpool.shape[3]
+            rep = h // kv
+            # meter the *logical* gathered K/V the tile streams, without
+            # ever materialising it: per-page spike totals indexed through
+            # the page table give the gathered count at O(pool) cost, and
+            # the GQA repeat is a plain multiplier on count and size alike
+            kc = jnp.sum(kpool.astype(jnp.float32), axis=(1, 2, 3, 4))  # [P]
+            vc = jnp.sum(vpool.astype(jnp.float32), axis=(1, 2, 3, 4))
+            qs = self._count(q)
+            ks = rep * float(jnp.sum(kc[page_table]))
+            vs = rep * float(jnp.sum(vc[page_table]))
+            kv_size = b * t * rep * kv * l * d  # the dense gathered view
+        else:
+            l = view.k.shape[3]
+            qs, ks, vs = (self._count(q), self._count(view.k),
+                          self._count(view.v))
+            kv_size = view.k.size
         e = EM.meter_ssa(t, b * h, n, l, d, qs / q.size, ks / kv_size,
                          vs / kv_size)
         self.report.ssa_pj += e["ssa"]
@@ -783,6 +858,7 @@ class XpikeformerEngine:
         paged: bool = False,
         page_len: int = 8,
         n_pages: Optional[int] = None,
+        decode_kernel: str = "auto",
     ):
         """A :class:`repro.serving.BatchScheduler` over this engine.
 
@@ -791,16 +867,20 @@ class XpikeformerEngine:
         integer oracle is the bit-exactness contract).  ``paged=True``
         serves spiking SSA configs off the block-paged spike-train KV
         cache (exact prefix sharing + chunked prefill) — bit-identical
-        tokens to dense serving.  Schedulers are cached per (slots,
-        cache_len, moe_impl, paged geometry) and reset on reuse, so
-        repeated :meth:`serve`/:meth:`generate` calls keep the compiled
-        decode/prefill functions warm."""
+        tokens to dense serving.  ``decode_kernel`` picks the kernel
+        strategy via :func:`repro.kernels.plan.build_decode_plan`:
+        ``"auto"`` runs the fused decode megakernel where (config,
+        backend) support it, ``"fused"`` demands it, ``"unfused"`` forces
+        the per-primitive path — all bit-identical tokens.  Schedulers are
+        cached per (slots, cache_len, moe_impl, paged geometry, kernel)
+        and reset on reuse, so repeated :meth:`serve`/:meth:`generate`
+        calls keep the compiled decode/prefill functions warm."""
         from repro.serving import BatchScheduler
 
         assert self.task == "lm", "serving drives the generic LM stack (task='lm')"
         params = self.params if params is None else params
         assert params is not None, "call init() first or pass params"
-        key = (slots, cache_len, moe_impl, paged) + (
+        key = (slots, cache_len, moe_impl, paged, decode_kernel) + (
             (page_len, n_pages) if paged else ())
         sch = self._schedulers.get(key) if pctx is None else None
         if sch is not None:
@@ -811,7 +891,7 @@ class XpikeformerEngine:
         sch = BatchScheduler(
             params, self.cfg, self.backend, slots=slots, cache_len=cache_len,
             pctx=pctx, moe_impl=moe_impl, drift=drift, paged=paged,
-            page_len=page_len, n_pages=n_pages,
+            page_len=page_len, n_pages=n_pages, decode_kernel=decode_kernel,
         )
         if pctx is None:
             self._schedulers[key] = sch
@@ -832,6 +912,7 @@ class XpikeformerEngine:
         paged: bool = False,
         page_len: int = 8,
         n_pages: Optional[int] = None,
+        decode_kernel: str = "auto",
     ):
         """Continuous-batching serve: prompts -> (outputs, ServeStats).
 
@@ -844,7 +925,8 @@ class XpikeformerEngine:
         spike-train KV cache with exact prefix reuse and chunked prefill."""
         sch = self.scheduler(slots=slots, cache_len=cache_len, params=params,
                              pctx=pctx, moe_impl=moe_impl, drift=drift,
-                             paged=paged, page_len=page_len, n_pages=n_pages)
+                             paged=paged, page_len=page_len, n_pages=n_pages,
+                             decode_kernel=decode_kernel)
         rids = [sch.submit(p, max_new, seed=seed + i) for i, p in enumerate(prompts)]
         outs = sch.run()
         if params is None and sch._programmed:

@@ -1,0 +1,501 @@
+"""Pallas megakernel: one launch per spiking decoder layer (dense & paged).
+
+The unfused decode path crosses LIF -> spiking-linear -> SSA-decode -> FFN
+as separate ``pallas_call``s with bit-unpack/repack and HBM round-trips
+between every primitive.  This module executes the *whole* decoder layer
+per launch:
+
+* spike trains are packed to uint32 bit-planes once at layer entry and
+  stay packed in VMEM end to end (32 AND-gates per VPU op, popcount
+  accumulation — the SSA engine's counter array, §IV-B);
+* the T-loop is *outside* the head loop (per E2ATST's temporal-spatial
+  dataflow analysis): each packed K/V operand is reused across all T
+  timesteps of the step before the next head's operands are touched;
+* Q/K/V projections, the one-query SSA row, attention-out and the FFN
+  tail all run in scratch; nothing non-binary reaches HBM.
+
+Dense layout: a single program (no grid) holding the step's whole
+``[B, T, L, KV, hd]`` cache block.  Paged layout: grid ``(slot, page)``
+riding the same scalar-prefetch page-table dereference as
+``ssa_decode_paged_kernel`` — each program DMAs exactly one physical page
+and popcount-accumulates into an int32 scratch across pages.
+
+New-token handling is *additive* instead of scatter-inside-kernel: the
+caller passes the **pre-scatter** cache (the row at each slot's ``pos``
+is all-zero by the serving invariant), the kernel computes the new K/V
+trains itself and adds their score/output contribution
+``s_new * v_new`` on top of the cached counts.  Because a zero row
+contributes zero AND-counts and ``0 > r`` never fires for the
+non-negative comparator draws, this is bit-identical to attending over
+the post-scatter cache.  The caller scatters the returned ``k_new`` /
+``v_new`` afterwards.  Slots whose write position is masked (dense:
+``pos >= L``; paged: the write page not reachable through the slot's
+page table — e.g. idle slots parked on the trash page) get their
+position comparator forced to an unbeatable value, matching the oracle's
+dropped-scatter semantics.
+
+Float-rounding discipline (see ``kernels/ref.py``): spike counts are
+exact integers, so every dot is exact under any blocking; scale and bias
+are committed as separate f32 roundings; membranes run through a value
+carry (``fori_loop``), one committed rounding per step — bit-identical
+to :func:`repro.kernels.ref.aimc_spiking_linear_ref` and hence to the
+fused-layer oracles :func:`repro.kernels.ref.decode_layer_ref` /
+:func:`repro.kernels.ref.decode_layer_paged_ref` under the property
+harness.  ``interpret=True`` (the CPU test/bench path) executes these
+bodies exactly; in-body padding/repeat keeps shapes free.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ops as KOPS
+
+Array = jax.Array
+
+# a comparator draw no AND-count can beat: disables the new-token term
+_INVALID_RS = 2 ** 30
+
+
+def _pack_lanes(x: Array) -> Array:
+    """Pack binary [..., n] (n % 32 == 0) into uint32 lanes (last axis)."""
+    *lead, n = x.shape
+    xr = x.reshape(*lead, n // 32, 32).astype(jnp.uint32)
+    w = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(xr * w, axis=-1, dtype=jnp.uint32)
+
+
+def _pad_last(x: Array, mult: int = 32) -> Array:
+    pad = (-x.shape[-1]) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def _lif_chain(pre: Array, beta: float, v_thresh: float) -> Array:
+    """LIF membrane recursion over the leading T axis, value-carried.
+
+    Same committed op sequence per step as ``ref.lif_ref``'s ``lax.scan``
+    (mul, add, compare, reset-multiply — each one f32 rounding), so the
+    spike trains are bit-identical."""
+    t = pre.shape[0]
+
+    def step(ti, carry):
+        v, out = carry
+        cur = lax.dynamic_slice_in_dim(pre, ti, 1, axis=0)[0]
+        v = beta * v + cur
+        spk = (v >= v_thresh).astype(jnp.float32)
+        out = lax.dynamic_update_slice_in_dim(out, spk[None], ti, axis=0)
+        return v * (1.0 - spk), out
+
+    _, out = lax.fori_loop(
+        0, t, step,
+        (jnp.zeros(pre.shape[1:], jnp.float32), jnp.zeros_like(pre)))
+    return out
+
+
+def _lin_lif(x: Array, w, *, beta: float, v_thresh: float) -> Array:
+    """Quantised crossbar + LIF on [T, ..., d_in] integer-valued f32 input.
+
+    ``w`` is an ``(int8 levels, f32 scale, f32 bias)`` triple.  Counts are
+    exact integers (dot exact under any blocking); ``* scale`` and
+    ``+ bias`` commit one rounding each, then the membrane chain — the
+    oracle's exact float structure, for any batch slice of the input."""
+    lv, sc, bi = w
+    lead = x.shape[:-1]
+    pre = jnp.dot(x.reshape(-1, x.shape[-1]), lv.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    pre = pre.reshape(*lead, -1)
+    pre = pre * sc
+    pre = pre + bi
+    return _lif_chain(pre, beta, v_thresh)
+
+
+def draw_layer_prns(slot_keys: Array, t: int, h: int, l: int, hd: int,
+                    h0: Union[int, Array] = 0) -> Tuple[Array, Array]:
+    """Per-(slot, global head) comparator draws for one fused layer step.
+
+    Thin reshape over :func:`repro.kernels.ops.draw_slot_decode_prns`
+    (same streams as the unfused path: ``r_s ~ U{0..hd-1}`` per cached
+    position, ``r_a ~ U{0..L-1}`` per output lane, ``i_max = L``) to the
+    fused kernels' ``rs [B,T,H,L]`` / ``ra [B,T,H,hd]`` layouts."""
+    rs, ra = KOPS.draw_slot_decode_prns(slot_keys, t, h, l, hd, l, h0)
+    b = slot_keys.shape[0]
+    return rs.reshape(b, t, h, l), ra.reshape(b, t, h, hd)
+
+
+def _rs_at_pos(rs4: Array, pos: Array, valid: Array) -> Array:
+    """The score-comparator draw each slot's *new* token must beat.
+
+    Gathers ``rs[b, :, :, pos[b]]`` — the draw the oracle's post-scatter
+    cache row at ``pos`` sees — and forces it unbeatable where the write
+    is masked, reproducing the oracle's dropped-scatter semantics."""
+    l = rs4.shape[-1]
+    idx = jnp.clip(pos, 0, l - 1).astype(jnp.int32)
+    rsp = jnp.take_along_axis(rs4, idx[:, None, None, None], axis=3)[..., 0]
+    return jnp.where(valid[:, None, None], rsp, jnp.int32(_INVALID_RS))
+
+
+def _norm_w(w):
+    lv, sc, bi = w
+    if bi is None:
+        bi = jnp.zeros_like(sc, dtype=jnp.float32)
+    return (lv, sc.astype(jnp.float32), bi.astype(jnp.float32))
+
+
+def _read_w(it):
+    return (next(it)[...], next(it)[...], next(it)[...])
+
+
+# ---------------------------------------------------------------------------
+# Dense megakernel: one program per layer step
+# ---------------------------------------------------------------------------
+
+
+def _fused_dense_body(*refs, t: int, hd: int, h: int, kv: int,
+                      with_tail: bool, with_mlp: bool,
+                      beta: float, v_thresh: float):
+    it = iter(refs)
+    s_ref = next(it)
+    sk_ref = next(it)
+    sv_ref = next(it)
+    rs_ref = next(it)
+    ra_ref = next(it)
+    rsp_ref = next(it)
+    wq = _read_w(it)
+    wk = _read_w(it)
+    wv = _read_w(it)
+    wo = _read_w(it) if with_tail else None
+    wi = _read_w(it) if (with_tail and with_mlp) else None
+    wo2 = _read_w(it) if (with_tail and with_mlp) else None
+    out_ref = next(it)
+    kn_ref = next(it)
+    vn_ref = next(it)
+
+    kw = dict(beta=beta, v_thresh=v_thresh)
+    s = s_ref[...]  # [T, B, d] integer-valued f32
+    b = s.shape[1]
+    rep = h // kv
+
+    # --- projections (packed spikes never leave this body) ---
+    q = _lin_lif(s, wq, **kw).reshape(t, b, h, hd)
+    k_new = _lin_lif(s, wk, **kw).reshape(t, b, kv, hd)
+    v_new = _lin_lif(s, wv, **kw).reshape(t, b, kv, hd)
+    kn_ref[...] = k_new.astype(jnp.uint8)
+    vn_ref[...] = v_new.astype(jnp.uint8)
+
+    # --- pack at layer entry: lanes along hd ---
+    qp = _pack_lanes(_pad_last(jnp.moveaxis(q, 0, 1)))  # [B,T,H,Wd]
+    kc = jnp.moveaxis(sk_ref[...], 3, 2)  # [B,T,KV,L,hd] u8
+    vc = jnp.moveaxis(sv_ref[...], 3, 2)
+    if rep > 1:
+        kc = jnp.repeat(kc, rep, axis=2)
+        vc = jnp.repeat(vc, rep, axis=2)
+    kcp = _pack_lanes(_pad_last(kc))  # [B,T,H,L,Wd]
+
+    # --- score stage: popcount(q & k_cache) vs r_s ---
+    counts_s = jnp.sum(lax.population_count(qp[:, :, :, None, :] & kcp),
+                       axis=-1).astype(jnp.int32)  # [B,T,H,L]
+    s_spk = (counts_s > rs_ref[...]).astype(jnp.int32)
+
+    # --- output stage: repack score spikes along the cache axis ---
+    sp = _pack_lanes(_pad_last(s_spk))  # [B,T,H,Wl]
+    vcp = _pack_lanes(_pad_last(jnp.moveaxis(vc, -2, -1)))  # [B,T,H,hd,Wl]
+    counts_a = jnp.sum(lax.population_count(sp[:, :, :, None, :] & vcp),
+                       axis=-1).astype(jnp.int32)  # [B,T,H,hd]
+
+    # --- new token, additively (cache row at pos is zero pre-scatter) ---
+    knp = _pack_lanes(_pad_last(jnp.moveaxis(k_new, 0, 1)))  # [B,T,KV,Wd]
+    vnb = jnp.moveaxis(v_new, 0, 1).astype(jnp.int32)  # [B,T,KV,hd]
+    if rep > 1:
+        knp = jnp.repeat(knp, rep, axis=2)
+        vnb = jnp.repeat(vnb, rep, axis=2)
+    cnt_new = jnp.sum(lax.population_count(qp & knp),
+                      axis=-1).astype(jnp.int32)  # [B,T,H]
+    s_new = (cnt_new > rsp_ref[...]).astype(jnp.int32)
+    counts_a = counts_a + s_new[..., None] * vnb
+
+    a = (counts_a > ra_ref[...]).astype(jnp.float32)  # [B,T,H,hd]
+    at = jnp.moveaxis(a, 0, 1).reshape(t, b, h * hd)
+
+    if not with_tail:
+        out_ref[...] = at
+        return
+    s1 = s + _lin_lif(at, wo, **kw)
+    if with_mlp:
+        h1 = _lin_lif(s1, wi, **kw)
+        s1 = s1 + _lin_lif(h1, wo2, **kw)
+    out_ref[...] = s1
+
+
+@partial(jax.jit, static_argnames=("hd", "with_tail", "with_mlp", "beta",
+                                   "v_thresh", "interpret"))
+def fused_decode_layer(
+    slot_keys: Array,  # [B, 2] uint32 per-slot PRNG keys
+    s: Array,  # [T, B, d] integer-valued f32 residual spike stream
+    sk: Array,  # [B, T, L, KV, hd] uint8 pre-scatter key cache
+    sv: Array,  # [B, T, L, KV, hd] uint8 pre-scatter value cache
+    pos: Array,  # [B] int32 write positions (rows >= pos are zero)
+    wq, wk, wv,  # (levels int8 [d_in,d_out], scale f32, bias f32|None)
+    wo=None, wi=None, wo2=None,
+    h0: Union[int, Array] = 0,  # global index of this shard's first head
+    *,
+    hd: int,
+    with_tail: bool = True,
+    with_mlp: bool = True,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array]:
+    """One fused spiking decoder layer step over a dense slot cache.
+
+    Returns ``(s_out [T,B,d], k_new [T,B,KV,hd] u8, v_new)`` — the caller
+    scatters ``k_new``/``v_new`` into the cache at ``pos`` afterwards.
+    ``with_tail=False`` returns the attention train ``a [T,B,H*hd]``
+    instead (the tensor-parallel shard building block; ``h0`` names the
+    shard's first global head and may be traced).  Bit-exact vs
+    :func:`repro.kernels.ref.decode_layer_ref` given the same slot keys.
+    """
+    t, b, d = s.shape
+    l, kv = sk.shape[2], sk.shape[3]
+    wq, wk, wv = _norm_w(wq), _norm_w(wk), _norm_w(wv)
+    h = wq[0].shape[1] // hd
+    rs4, ra4 = draw_layer_prns(slot_keys, t, h, l, hd, h0)
+    rsp = _rs_at_pos(rs4, pos, pos < l)
+    operands = [s.astype(jnp.float32), sk.astype(jnp.uint8),
+                sv.astype(jnp.uint8), rs4, ra4, rsp]
+    operands += list(wq) + list(wk) + list(wv)
+    if with_tail:
+        operands += list(_norm_w(wo))
+        if with_mlp:
+            operands += list(_norm_w(wi)) + list(_norm_w(wo2))
+    ds = d if with_tail else h * hd
+    body = partial(_fused_dense_body, t=t, hd=hd, h=h, kv=kv,
+                   with_tail=with_tail, with_mlp=with_mlp,
+                   beta=beta, v_thresh=v_thresh)
+    out_s, kn, vn = pl.pallas_call(
+        body,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, b, ds), jnp.float32),
+            jax.ShapeDtypeStruct((t, b, kv, hd), jnp.uint8),
+            jax.ShapeDtypeStruct((t, b, kv, hd), jnp.uint8),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return out_s, kn, vn
+
+
+# ---------------------------------------------------------------------------
+# Paged megakernel: grid (slot, page-table column), page axis innermost
+# ---------------------------------------------------------------------------
+
+
+def _fused_paged_body(*refs, t: int, hd: int, h: int, kv: int,
+                      with_tail: bool, with_mlp: bool,
+                      beta: float, v_thresh: float):
+    it = iter(refs)
+    tbl_ref = next(it)  # scalar-prefetched page table (used by index maps)
+    s_ref = next(it)  # [T, 1, d]
+    kp_ref = next(it)  # [1, T, KV, PLp, Wd] u32 — one key page
+    vp_ref = next(it)  # [1, T, KV, hd, Wp] u32 — one value page
+    rs_ref = next(it)  # [1, T, H, 1, PLp]
+    rsp_ref = next(it)  # [1, T, H]
+    ra_ref = next(it)  # [1, T, H, hd]
+    wq = _read_w(it)
+    wk = _read_w(it)
+    wv = _read_w(it)
+    wo = _read_w(it) if with_tail else None
+    wi = _read_w(it) if (with_tail and with_mlp) else None
+    wo2 = _read_w(it) if (with_tail and with_mlp) else None
+    out_ref = next(it)  # [T, 1, ds]
+    kn_ref = next(it)  # [T, 1, KV, hd]
+    vn_ref = next(it)
+    qp_scr = next(it)  # VMEM [T, H, Wd] u32 — packed query, page-invariant
+    acc_ref = next(it)  # VMEM [T, H, hd] i32 — output AND-count accumulator
+
+    del tbl_ref  # consumed by the block index maps, not the body
+    kw = dict(beta=beta, v_thresh=v_thresh)
+    rep = h // kv
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _project():
+        # Per-slot projections: LIF is elementwise over the batch, so the
+        # B=1 slice is bit-identical to the full-batch oracle's row.
+        s = s_ref[:, 0]  # [T, d]
+        q = _lin_lif(s, wq, **kw).reshape(t, h, hd)
+        k_new = _lin_lif(s, wk, **kw).reshape(t, kv, hd)
+        v_new = _lin_lif(s, wv, **kw).reshape(t, kv, hd)
+        kn_ref[:, 0] = k_new.astype(jnp.uint8)
+        vn_ref[:, 0] = v_new.astype(jnp.uint8)
+        qp = _pack_lanes(_pad_last(q))  # [T, H, Wd]
+        qp_scr[...] = qp
+        # new-token term, additively (see module docstring)
+        knp = _pack_lanes(_pad_last(k_new))  # [T, KV, Wd]
+        vnb = v_new.astype(jnp.int32)
+        if rep > 1:
+            knp = jnp.repeat(knp, rep, axis=1)
+            vnb = jnp.repeat(vnb, rep, axis=1)
+        cnt_new = jnp.sum(lax.population_count(qp & knp),
+                          axis=-1).astype(jnp.int32)  # [T, H]
+        s_new = (cnt_new > rsp_ref[0]).astype(jnp.int32)
+        acc_ref[...] = s_new[..., None] * vnb
+
+    # every page: popcount(q & k_page) vs this page's r_s slice, repack the
+    # score spikes along the in-page axis, accumulate output AND-counts.
+    # Integer sums commute, so page-order accumulation == dense reduction.
+    qp = qp_scr[...]
+    kp = kp_ref[0]  # [T, KV, PLp, Wd]
+    vp = vp_ref[0]  # [T, KV, hd, Wp]
+    if rep > 1:
+        kp = jnp.repeat(kp, rep, axis=1)
+        vp = jnp.repeat(vp, rep, axis=1)
+    counts_s = jnp.sum(lax.population_count(qp[:, :, None, :] & kp),
+                       axis=-1).astype(jnp.int32)  # [T, H, PLp]
+    s_spk = (counts_s > rs_ref[0, :, :, 0]).astype(jnp.int32)
+    sp = _pack_lanes(s_spk)  # [T, H, Wp] (PLp is a 32-multiple)
+    acc_ref[...] += jnp.sum(lax.population_count(sp[:, :, None, :] & vp),
+                            axis=-1).astype(jnp.int32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fire():
+        a = (acc_ref[...] > ra_ref[0]).astype(jnp.float32)  # [T, H, hd]
+        at = a.reshape(t, h * hd)
+        if not with_tail:
+            out_ref[:, 0] = at
+            return
+        s1 = s_ref[:, 0] + _lin_lif(at, wo, **kw)
+        if with_mlp:
+            h1 = _lin_lif(s1, wi, **kw)
+            s1 = s1 + _lin_lif(h1, wo2, **kw)
+        out_ref[:, 0] = s1
+
+
+def _w_specs(wq, wk, wv, wo, wi, wo2):
+    specs = []
+    for w in (wq, wk, wv, wo, wi, wo2):
+        if w is None:
+            continue
+        lv, sc, bi = w
+        specs.append(pl.BlockSpec(lv.shape, lambda ib, j, tbl: (0, 0)))
+        specs.append(pl.BlockSpec(sc.shape, lambda ib, j, tbl: (0,)))
+        specs.append(pl.BlockSpec(bi.shape, lambda ib, j, tbl: (0,)))
+    return specs
+
+
+@partial(jax.jit, static_argnames=("hd", "with_tail", "with_mlp", "beta",
+                                   "v_thresh", "interpret"))
+def fused_decode_layer_paged(
+    slot_keys: Array,  # [B, 2] uint32 per-slot PRNG keys
+    s: Array,  # [T, B, d] integer-valued f32 residual spike stream
+    kpool: Array,  # [P, T, KV, page_len, hd] uint8 pre-scatter key pool
+    vpool: Array,  # [P, T, KV, page_len, hd] uint8 pre-scatter value pool
+    page_table: Array,  # [B, MP] int32 page ids (0 = null page)
+    pos: Array,  # [B] int32 logical write positions
+    write_pids: Array,  # [B] int32 physical pages the new K/V scatter into
+    wq, wk, wv,  # (levels int8, scale f32, bias f32|None) triples
+    wo=None, wi=None, wo2=None,
+    h0: Union[int, Array] = 0,
+    *,
+    hd: int,
+    with_tail: bool = True,
+    with_mlp: bool = True,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array]:
+    """One fused spiking decoder layer step over a block-paged KV pool.
+
+    The paged twin of :func:`fused_decode_layer`: K/V pages ride the
+    scalar-prefetch page-table grid (one physical page DMA'd per program,
+    the dense cache never materialised), the output counts accumulate in
+    VMEM scratch across pages, and the projections/FFN fire in the first/
+    last page program of each slot.  The new token's contribution is
+    added only where the write page is actually reachable through the
+    slot's table (``table[b, pos // page_len] == write_pids[b]``) — idle
+    slots park writes on the unreachable trash page, exactly the unfused
+    paged semantics.  Bit-exact vs
+    :func:`repro.kernels.ref.decode_layer_paged_ref`.
+    """
+    t, b, d = s.shape
+    kv, pl_ = kpool.shape[2], kpool.shape[3]
+    mp = page_table.shape[1]
+    l = mp * pl_
+    wq, wk, wv = _norm_w(wq), _norm_w(wk), _norm_w(wv)
+    wo = _norm_w(wo) if with_tail else None
+    wi = _norm_w(wi) if (with_tail and with_mlp) else None
+    wo2 = _norm_w(wo2) if (with_tail and with_mlp) else None
+    h = wq[0].shape[1] // hd
+    rs4, ra4 = draw_layer_prns(slot_keys, t, h, l, hd, h0)
+    reach = jnp.take_along_axis(
+        page_table, jnp.clip(pos // pl_, 0, mp - 1)[:, None], axis=1)[:, 0]
+    rsp = _rs_at_pos(rs4, pos, (pos < l) & (reach == write_pids))
+
+    # pack the pools: K along hd lanes, V along the (padded) in-page axis
+    p_pad = (-pl_) % 32
+    plp = pl_ + p_pad
+    kf = kpool.astype(jnp.uint8)
+    vf = vpool.astype(jnp.uint8)
+    if p_pad:
+        pad5 = ((0, 0),) * 3 + ((0, p_pad), (0, 0))
+        kf = jnp.pad(kf, pad5)
+        vf = jnp.pad(vf, pad5)
+    kpp = _pack_lanes(_pad_last(kf))  # [P,T,KV,PLp,Wd]
+    vpp = _pack_lanes(jnp.moveaxis(vf, 3, -1))  # [P,T,KV,hd,Wp]
+    wd, wp = kpp.shape[-1], vpp.shape[-1]
+    rs5 = rs4.reshape(b, t, h, mp, pl_)
+    if p_pad:  # padded positions: zero K spikes vs zero draws — 0 > 0 never
+        rs5 = jnp.pad(rs5, ((0, 0),) * 4 + ((0, p_pad),))
+
+    ds = d if with_tail else h * hd
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, mp),
+        in_specs=[
+            pl.BlockSpec((t, 1, d), lambda ib, j, tbl: (0, ib, 0)),
+            pl.BlockSpec((1, t, kv, plp, wd),
+                         lambda ib, j, tbl: (tbl[ib, j], 0, 0, 0, 0)),
+            pl.BlockSpec((1, t, kv, hd, wp),
+                         lambda ib, j, tbl: (tbl[ib, j], 0, 0, 0, 0)),
+            pl.BlockSpec((1, t, h, 1, plp),
+                         lambda ib, j, tbl: (ib, 0, 0, j, 0)),
+            pl.BlockSpec((1, t, h), lambda ib, j, tbl: (ib, 0, 0)),
+            pl.BlockSpec((1, t, h, hd), lambda ib, j, tbl: (ib, 0, 0, 0)),
+        ] + _w_specs(wq, wk, wv, wo, wi, wo2),
+        out_specs=[
+            pl.BlockSpec((t, 1, ds), lambda ib, j, tbl: (0, ib, 0)),
+            pl.BlockSpec((t, 1, kv, hd), lambda ib, j, tbl: (0, ib, 0, 0)),
+            pl.BlockSpec((t, 1, kv, hd), lambda ib, j, tbl: (0, ib, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t, h, wd), jnp.uint32),
+            pltpu.VMEM((t, h, hd), jnp.int32),
+        ],
+    )
+    body = partial(_fused_paged_body, t=t, hd=hd, h=h, kv=kv,
+                   with_tail=with_tail, with_mlp=with_mlp,
+                   beta=beta, v_thresh=v_thresh)
+    operands = [s.astype(jnp.float32), kpp, vpp, rs5, rsp, ra4]
+    operands += list(wq) + list(wk) + list(wv)
+    if with_tail:
+        operands += list(wo)
+        if with_mlp:
+            operands += list(wi) + list(wo2)
+    out_s, kn, vn = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, b, ds), jnp.float32),
+            jax.ShapeDtypeStruct((t, b, kv, hd), jnp.uint8),
+            jax.ShapeDtypeStruct((t, b, kv, hd), jnp.uint8),
+        ),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), *operands)
+    return out_s, kn, vn

@@ -224,3 +224,145 @@ def aimc_spiking_linear_ref(
 
     _, out = jax.lax.scan(step, jnp.zeros(pre.shape[1:], jnp.float32), pre)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fused decode layer (the megakernel oracle)
+# ---------------------------------------------------------------------------
+
+
+def _lin_lif_ref(x: Array, w, *, beta: float, v_thresh: float) -> Array:
+    """One quantised crossbar + LIF stage on [T, B, d_in] integer-valued f32
+    inputs; ``w`` is an (int8 levels, f32 scale, f32 bias | None) triple."""
+    levels, scale, bias = w
+    return aimc_spiking_linear_ref(
+        x.astype(jnp.float32), levels, scale, bias,
+        beta=beta, v_thresh=v_thresh).astype(jnp.float32)
+
+
+def _ssa_decode_row_ref(q, kf, vf, k_new, v_new, pos, rs, ra):
+    """One-query SSA over a *post-scatter* dense cache view.
+
+    q [T,B,H,hd]; kf/vf [B,T,L,KV,hd] uint8 pre-scatter (zero rows at and
+    beyond each slot's pos); k_new/v_new [T,B,KV,hd]; pos [B]; rs
+    [B,T,H,L]; ra [B,T,H,hd].  Scatters the new token at ``pos`` and runs
+    the exact integer comparator math of :func:`ssa_decode_ref` over the
+    whole cache — the semantics the fused kernels must reproduce."""
+    b = kf.shape[0]
+    h, kv = q.shape[2], kf.shape[3]
+    barange = jnp.arange(b)
+    kf = kf.at[barange, :, pos].set(jnp.moveaxis(k_new, 0, 1).astype(jnp.uint8))
+    vf = vf.at[barange, :, pos].set(jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
+    ki = jnp.transpose(kf, (0, 1, 3, 2, 4)).astype(jnp.int32)  # [B,T,KV,L,hd]
+    vi = jnp.transpose(vf, (0, 1, 3, 2, 4)).astype(jnp.int32)
+    if kv != h:
+        rep = h // kv
+        ki = jnp.repeat(ki, rep, axis=2)
+        vi = jnp.repeat(vi, rep, axis=2)
+    qi = jnp.moveaxis(q, 0, 1).astype(jnp.int32)  # [B,T,H,hd]
+    counts_s = jnp.einsum("bthd,bthld->bthl", qi, ki)
+    s = (counts_s > rs).astype(jnp.int32)
+    counts_a = jnp.einsum("bthl,bthld->bthd", s, vi)
+    a = (counts_a > ra).astype(jnp.float32)  # [B,T,H,hd]
+    return jnp.moveaxis(a, 0, 1).reshape(q.shape[0], b, h * q.shape[3])
+
+
+def decode_layer_ref(
+    s: Array,  # [T, B, d] integer-valued f32 residual spike stream
+    sk: Array,  # [B, T, L, KV, hd] uint8 pre-scatter key cache
+    sv: Array,  # [B, T, L, KV, hd] uint8 pre-scatter value cache
+    pos: Array,  # [B] int32 write position (rows >= pos must be zero)
+    wq, wk, wv, wo, wi, wo2,  # (levels int8, scale f32, bias f32|None)
+    rs: Array,  # [B, T, H, L] int32 comparator draws, U{0..hd-1}
+    ra: Array,  # [B, T, H, hd] int32 comparator draws, U{0..i_max-1}
+    *,
+    hd: int,
+    with_tail: bool = True,
+    with_mlp: bool = True,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+):
+    """Integer oracle for one fused spiking decoder layer (dense cache).
+
+    Op-for-op the unfused decode path of ``models/transformer.py`` —
+    Q/K/V spiking linears, scatter-at-pos, one-query SSA over the whole
+    cache, attention-out, residual, FFN tail — composed from the same
+    per-primitive oracles the backends are validated against, so
+    integer-fused == integer-unfused by construction and the Pallas
+    megakernel is fuzzed against this single function.
+
+    Returns ``(s_out [T,B,d], k_new [T,B,KV,hd] uint8, v_new)``; with
+    ``with_tail=False`` the first element is the attention spike train
+    ``a [T,B,H*hd]`` instead (the tensor-parallel shard building block).
+    """
+    t, b, _ = s.shape
+    kw = dict(beta=beta, v_thresh=v_thresh)
+    q = _lin_lif_ref(s, wq, **kw).reshape(t, b, -1, hd)
+    k_new = _lin_lif_ref(s, wk, **kw).reshape(t, b, -1, hd)
+    v_new = _lin_lif_ref(s, wv, **kw).reshape(t, b, -1, hd)
+    a = _ssa_decode_row_ref(q, sk, sv, k_new, v_new, pos, rs, ra)
+    k_new = k_new.astype(jnp.uint8)
+    v_new = v_new.astype(jnp.uint8)
+    if not with_tail:
+        return a, k_new, v_new
+    s1 = s + _lin_lif_ref(a, wo, **kw)
+    if with_mlp:
+        h1 = _lin_lif_ref(s1, wi, **kw)
+        s1 = s1 + _lin_lif_ref(h1, wo2, **kw)
+    return s1, k_new, v_new
+
+
+def decode_layer_paged_ref(
+    s: Array,  # [T, B, d]
+    kpool: Array,  # [P, T, KV, page_len, hd] uint8 pre-scatter page pool
+    vpool: Array,  # [P, T, KV, page_len, hd]
+    page_table: Array,  # [B, MP] int32 (0 = null page)
+    pos: Array,  # [B] logical write positions
+    write_pids: Array,  # [B] physical pages the new K/V trains scatter into
+    wq, wk, wv, wo, wi, wo2,
+    rs: Array,  # [B, T, H, L] int32, L = MP*page_len
+    ra: Array,  # [B, T, H, hd] int32
+    *,
+    hd: int,
+    with_tail: bool = True,
+    with_mlp: bool = True,
+    beta: float = 0.5,
+    v_thresh: float = 1.0,
+):
+    """Paged mirror of :func:`decode_layer_ref`: scatter the new K/V into
+    each slot's designated physical page, then attend over the page-table-
+    gathered logical cache — exactly the unfused paged decode semantics
+    (content reachable through the table; the trash page never is)."""
+    t, b, _ = s.shape
+    page_len = kpool.shape[3]
+    kw = dict(beta=beta, v_thresh=v_thresh)
+    q = _lin_lif_ref(s, wq, **kw).reshape(t, b, -1, hd)
+    k_new = _lin_lif_ref(s, wk, **kw).reshape(t, b, -1, hd)
+    v_new = _lin_lif_ref(s, wv, **kw).reshape(t, b, -1, hd)
+    off = pos % page_len
+    kp = kpool.at[write_pids, :, :, off].set(
+        jnp.moveaxis(k_new, 0, 1).astype(jnp.uint8))
+    vp = vpool.at[write_pids, :, :, off].set(
+        jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
+    kf = gather_kv_pages_ref(kp, page_table)  # [T, B, KV, L, hd]
+    vf = gather_kv_pages_ref(vp, page_table)
+    h, kv = q.shape[2], kpool.shape[2]
+    if kv != h:
+        rep = h // kv
+        kf = jnp.repeat(kf, rep, axis=2)
+        vf = jnp.repeat(vf, rep, axis=2)
+    qi = q.astype(jnp.int32)  # [T,B,H,hd]
+    counts_s = jnp.einsum("tbhd,tbhld->tbhl", qi, kf.astype(jnp.int32))
+    sp = (counts_s > jnp.moveaxis(rs, 1, 0)).astype(jnp.int32)
+    counts_a = jnp.einsum("tbhl,tbhld->tbhd", sp, vf.astype(jnp.int32))
+    a = (counts_a > jnp.moveaxis(ra, 1, 0)).astype(jnp.float32)
+    a = a.reshape(t, b, -1)
+    k_new = k_new.astype(jnp.uint8)
+    v_new = v_new.astype(jnp.uint8)
+    if not with_tail:
+        return a, k_new, v_new
+    s1 = s + _lin_lif_ref(a, wo, **kw)
+    if with_mlp:
+        h1 = _lin_lif_ref(s1, wi, **kw)
+        s1 = s1 + _lin_lif_ref(h1, wo2, **kw)
+    return s1, k_new, v_new

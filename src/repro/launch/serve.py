@@ -75,6 +75,7 @@ def serve(
     paged: bool = False,
     page_len: int = 8,
     n_pages: int = 0,
+    decode_kernel: str = "auto",
     http: bool = False,
     host: str = "127.0.0.1",
     port: int = 8000,
@@ -103,7 +104,7 @@ def serve(
               f"GDC every {recal_every_s or 'never'} s)")
 
     paged_kw = dict(paged=paged, page_len=page_len,
-                    n_pages=n_pages or None)
+                    n_pages=n_pages or None, decode_kernel=decode_kernel)
     if paged:
         print(f"[serve] paged spike-train KV cache: page_len={page_len}, "
               f"pool={n_pages or slots * (cache_len // page_len) + 2} pages, "
@@ -127,6 +128,8 @@ def serve(
             params, cfg, get_backend(backend), slots=slots, cache_len=cache_len,
             pctx=pctx, moe_impl=parallel.moe_impl, drift=drift, **paged_kw,
         )
+    if sch.plan is not None:
+        print(f"[serve] decode kernel: {sch.plan.describe()}")
     if http:
         _serve_http(sch, host=host, port=port)
         return []
@@ -218,6 +221,12 @@ def main(argv=None):
     ap.add_argument("--pages", type=int, default=0,
                     help="physical page-pool size (--paged; 0 = slots x "
                          "cache_len / page_len + reserved)")
+    ap.add_argument("--decode-kernel", default="auto",
+                    choices=["auto", "fused", "unfused"],
+                    help="decode kernel strategy: 'fused' = one megakernel "
+                         "launch per decoder layer (spiking SSA attention "
+                         "stacks on the integer/pallas backends); 'auto' "
+                         "picks fused where supported")
     ap.add_argument("--http", action="store_true", default=False,
                     help="serve over HTTP/SSE (POST /generate streams "
                          "tokens) instead of running synthetic requests")
@@ -235,8 +244,8 @@ def main(argv=None):
           max_new=a.max_new, cache_len=a.cache_len, backend=a.backend,
           program=a.program, drift_step_s=a.drift_step,
           recal_every_s=a.recal_every, mesh_spec=a.mesh, paged=a.paged,
-          page_len=a.page_len, n_pages=a.pages, http=a.http, host=a.host,
-          port=a.port)
+          page_len=a.page_len, n_pages=a.pages, decode_kernel=a.decode_kernel,
+          http=a.http, host=a.host, port=a.port)
 
 
 if __name__ == "__main__":

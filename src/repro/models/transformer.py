@@ -36,6 +36,7 @@ from repro.models.moe import ParallelCtx
 from repro.core import spikes as SP
 from repro.core import ssa as SSA
 from repro.core.spiking_transformer import _default_backend
+from repro.kernels.plan import AttnSpec, DecodePlan, KVView
 
 Array = jax.Array
 
@@ -591,8 +592,9 @@ def _spiking_attention_decode(params, s: Array, cache, cfg: ModelConfig,
         rep = h // kv
         kf = jnp.repeat(kf, rep, axis=2)
         vf = jnp.repeat(vf, rep, axis=2)
-    a = backend.ssa_attention_decode(slot_keys, q[:, :, :, None, :], kf, vf,
-                                     i_max=lcap)
+    a = backend.decode_attention(
+        KVView.dense(kf, vf), q[:, :, :, None, :],
+        AttnSpec(i_max=lcap, groups=h // kv), slot_keys=slot_keys)
     a = a.reshape(t, b, 1, h * hd).astype(s.dtype)
     out = backend.spiking_linear(None, _lin_operand(params["wo"], h * hd), a,
                                  part="row")
@@ -616,15 +618,83 @@ def _spiking_decode_ffn_tail(params, s: Array, cfg: ModelConfig,
         h1.astype(s.dtype), part="row").astype(s.dtype)
 
 
+def _fused_block_weights(params, cfg: ModelConfig, d: int):
+    """Weight operands for ``backend.decode_layer_fused``: the same
+    ``_lin_operand`` leaves the unfused per-primitive path feeds to
+    ``spiking_linear``, so fused and unfused quantise identically."""
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    mx = params["mixer"]
+    wq = _lin_operand(mx["wq"], d)
+    wk = _lin_operand(mx["wk"], d)
+    wv = _lin_operand(mx["wv"], d)
+    wo = _lin_operand(mx["wo"], h * hd)
+    with_mlp = "norm2" in params and "moe" not in params
+    wi = wo2 = None
+    if with_mlp:
+        wi = _lin_operand(params["mlp"]["wi"], d)
+        wo2 = _lin_operand(params["mlp"]["wo"], cfg.d_ff)
+    return wq, wk, wv, wo, wi, wo2, with_mlp
+
+
+def _fused_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
+                                slot_keys: Array, backend):
+    """One decoder block as a single fused-kernel launch (dense cache).
+
+    The backend's megakernel computes projections, SSA decode, attention-out
+    and the FFN tail in one pass over the *pre-scatter* cache (the row at
+    ``pos`` is zero by the serving invariant, and the kernel adds the new
+    token's contribution additively), then the returned K/V trains scatter
+    into the cache here — bit-identical to scatter-then-attend."""
+    t, b, _, d = s.shape
+    wq, wk, wv, wo, wi, wo2, with_mlp = _fused_block_weights(params, cfg, d)
+    pos = jnp.broadcast_to(cache["pos"], (b,))
+    out, k_new, v_new = backend.decode_layer_fused(
+        slot_keys, s[:, :, 0, :], KVView.dense(cache["sk"], cache["sv"]),
+        pos, wq, wk, wv, wo, wi, wo2, hd=cfg.resolved_head_dim,
+        with_mlp=with_mlp)
+    barange = jnp.arange(b)
+    sk = cache["sk"].at[barange, :, pos].set(
+        jnp.moveaxis(k_new, 0, 1).astype(jnp.uint8))
+    sv = cache["sv"].at[barange, :, pos].set(
+        jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
+    return (out[:, :, None, :].astype(s.dtype),
+            {"sk": sk, "sv": sv, "pos": pos + 1})
+
+
+def _fused_block_spiking_decode_paged(params, s: Array, blk_pool,
+                                      cfg: ModelConfig, page_table: Array,
+                                      pos: Array, write_pids: Array,
+                                      slot_keys: Array, backend):
+    """Paged mirror of :func:`_fused_block_spiking_decode`: one megakernel
+    launch over the pre-scatter page pool, then the returned K/V trains
+    scatter into each slot's designated physical page."""
+    t, b, _, d = s.shape
+    wq, wk, wv, wo, wi, wo2, with_mlp = _fused_block_weights(params, cfg, d)
+    out, k_new, v_new = backend.decode_layer_fused(
+        slot_keys, s[:, :, 0, :],
+        KVView.from_pool(blk_pool["kp"], blk_pool["vp"], page_table),
+        pos, wq, wk, wv, wo, wi, wo2, hd=cfg.resolved_head_dim,
+        write_pids=write_pids, with_mlp=with_mlp)
+    off = pos % blk_pool["kp"].shape[3]
+    kp = blk_pool["kp"].at[write_pids, :, :, off].set(
+        jnp.moveaxis(k_new, 0, 1).astype(jnp.uint8))
+    vp = blk_pool["vp"].at[write_pids, :, :, off].set(
+        jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
+    return out[:, :, None, :].astype(s.dtype), {"kp": kp, "vp": vp}
+
+
 def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
                                 pctx: ParallelCtx, mixer: str, slot_keys: Array,
-                                uid, backend):
+                                uid, backend, plan: Optional[DecodePlan] = None):
     """Spiking residual block, decode flavour (mirrors _apply_block_spiking)."""
 
     def keys_for(tag):
         return jax.vmap(lambda kk: jax.random.fold_in(kk, tag + uid))(slot_keys)
 
     if mixer in ("attn", "local"):
+        if plan is not None and plan.fused:
+            return _fused_block_spiking_decode(
+                params, s, cache, cfg, keys_for(1), backend)
         h, cache = _spiking_attention_decode(
             params["mixer"], s, cache, cfg, keys_for(1), backend)
         s = s + h.astype(s.dtype)
@@ -641,7 +711,8 @@ def _apply_block_spiking_decode(params, s: Array, cache, cfg: ModelConfig,
 
 
 def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
-                         pctx: ParallelCtx, backend, seeds: Array):
+                         pctx: ParallelCtx, backend, seeds: Array,
+                         plan: Optional[DecodePlan] = None):
     """One spiking decode step, entirely through the backend's primitives.
 
     tokens [B,1], seeds [B] uint32 (per-slot request stream ids) ->
@@ -672,7 +743,7 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
             for i, mixer in enumerate(cfg.block_pattern):
                 s, c = _apply_block_spiking_decode(
                     pp[f"blk{i}"], s, pc[f"blk{i}"], cfg, pctx, mixer,
-                    slot_keys, pidx * cfg.period + i, backend)
+                    slot_keys, pidx * cfg.period + i, backend, plan)
                 nc[f"blk{i}"] = c
                 act = act + slot_events(s)
             return (s, act), nc
@@ -686,7 +757,8 @@ def _decode_step_spiking(params, cache, tokens: Array, cfg: ModelConfig,
         for i in range(cfg.remainder_layers):
             s, c = _apply_block_spiking_decode(
                 params["remainder"][f"blk{i}"], s, cache["remainder"][f"blk{i}"],
-                cfg, pctx, cfg.block_pattern[i], slot_keys, base_uid + i, backend)
+                cfg, pctx, cfg.block_pattern[i], slot_keys, base_uid + i,
+                backend, plan)
             rem[f"blk{i}"] = c
             act = act + slot_events(s)
         new_cache["remainder"] = rem
@@ -778,8 +850,9 @@ def _spiking_attention_decode_paged(params, s: Array, blk_pool, cfg: ModelConfig
     vp = blk_pool["vp"].at[write_pids, :, :, off].set(
         jnp.moveaxis(v_new, 0, 1).astype(jnp.uint8))
     i_max = page_table.shape[1] * page_len  # logical cache capacity
-    a = backend.ssa_attention_decode_paged(
-        slot_keys, q[:, :, :, None, :], kp, vp, page_table, i_max=i_max)
+    a = backend.decode_attention(
+        KVView.from_pool(kp, vp, page_table), q[:, :, :, None, :],
+        AttnSpec(i_max=i_max, groups=h // kv), slot_keys=slot_keys)
     a = a.reshape(t, b, 1, h * hd).astype(s.dtype)
     out = backend.spiking_linear(None, _lin_operand(params["wo"], h * hd), a,
                                  part="row")
@@ -790,12 +863,17 @@ def _apply_block_spiking_decode_paged(params, s: Array, blk_pool,
                                       cfg: ModelConfig, pctx: ParallelCtx,
                                       page_table: Array, pos: Array,
                                       write_pids: Array, slot_keys: Array,
-                                      uid, backend):
+                                      uid, backend,
+                                      plan: Optional[DecodePlan] = None):
     """Spiking residual block over the paged pool (decode flavour)."""
 
     def keys_for(tag):
         return jax.vmap(lambda kk: jax.random.fold_in(kk, tag + uid))(slot_keys)
 
+    if plan is not None and plan.fused:
+        return _fused_block_spiking_decode_paged(
+            params, s, blk_pool, cfg, page_table, pos, write_pids,
+            keys_for(1), backend)
     h, blk_pool = _spiking_attention_decode_paged(
         params["mixer"], s, blk_pool, cfg, page_table, pos, write_pids,
         keys_for(1), backend)
@@ -807,7 +885,7 @@ def _apply_block_spiking_decode_paged(params, s: Array, blk_pool,
 def paged_decode_step(params, pool, page_table: Array, tokens: Array,
                       pos: Array, seeds: Array, write_pids: Array,
                       cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
-                      *, backend=None):
+                      *, backend=None, plan: Optional[DecodePlan] = None):
     """One spiking decode step over the block-paged KV pool.
 
     tokens [B,1], pos [B] (each slot's logical write position), seeds [B]
@@ -843,7 +921,8 @@ def paged_decode_step(params, pool, page_table: Array, tokens: Array,
             for i in range(cfg.period):
                 s, c = _apply_block_spiking_decode_paged(
                     pp[f"blk{i}"], s, pc[f"blk{i}"], cfg, pctx, page_table,
-                    pos, write_pids, slot_keys, pidx * cfg.period + i, backend)
+                    pos, write_pids, slot_keys, pidx * cfg.period + i, backend,
+                    plan)
                 nc[f"blk{i}"] = c
                 act = act + slot_events(s)
             return (s, act), nc
@@ -858,7 +937,7 @@ def paged_decode_step(params, pool, page_table: Array, tokens: Array,
             s, c = _apply_block_spiking_decode_paged(
                 params["remainder"][f"blk{i}"], s, pool["remainder"][f"blk{i}"],
                 cfg, pctx, page_table, pos, write_pids, slot_keys,
-                base_uid + i, backend)
+                base_uid + i, backend, plan)
             rem[f"blk{i}"] = c
             act = act + slot_events(s)
         new_pool["remainder"] = rem
@@ -870,7 +949,7 @@ def paged_decode_step(params, pool, page_table: Array, tokens: Array,
 def decode_step(
     params, cache, tokens: Array, cfg: ModelConfig, pctx: ParallelCtx = ParallelCtx(),
     *, moe_impl: str = "ep_a2a", backend=None, seeds: Optional[Array] = None,
-    with_activity: bool = False,
+    with_activity: bool = False, plan: Optional[DecodePlan] = None,
 ):
     """One decoding step. tokens [B,1] -> (logits [B,1,V], new cache).
 
@@ -887,7 +966,7 @@ def decode_step(
             seeds = jnp.zeros((tokens.shape[0],), jnp.uint32)
         logits, new_cache, act = _decode_step_spiking(
             params, cache, tokens, cfg, pctx, backend or _default_backend(),
-            seeds)
+            seeds, plan)
         if with_activity:
             return logits, new_cache, act
         return logits, new_cache

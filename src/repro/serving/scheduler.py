@@ -58,6 +58,7 @@ import numpy as np
 
 from repro import aimc_device as AD
 from repro.energy import model as EM
+from repro.kernels.plan import build_decode_plan
 from repro.models import transformer as T
 from repro.models.moe import ParallelCtx
 from repro.serving import state as ST
@@ -161,6 +162,7 @@ class BatchScheduler:
         paged: bool = False,
         page_len: int = 8,
         n_pages: Optional[int] = None,
+        decode_kernel: str = "auto",
     ):
         self.placement = placement  # repro.distributed.Executor | None
         if placement is not None:
@@ -174,6 +176,18 @@ class BatchScheduler:
         self.moe_impl = moe_impl or ("ep_a2a" if cfg.is_moe else "dense")
         self.drift = drift
         self.paged = bool(paged)
+        # one DecodePlan per scheduler lifetime: the jitted decode step
+        # closes over it, so kernel selection can never recompile mid-serve
+        if T._spiking_decode_enabled(cfg):
+            self.plan = build_decode_plan(
+                cfg, backend, layout="paged" if self.paged else "dense",
+                kernel=decode_kernel, page_len=page_len)
+        else:
+            if decode_kernel == "fused":
+                raise ValueError(
+                    "decode kernel 'fused' needs a spiking SSA config, "
+                    f"not {cfg.name!r}")
+            self.plan = None
         if self.paged:
             if not T.paged_decode_supported(cfg):
                 raise ValueError(
@@ -216,7 +230,8 @@ class BatchScheduler:
                 self._copy_page = jax.jit(ST.pool_copy_page,
                                           out_shardings=state_sh)
             self._decode = ST.make_paged_decode_fn(
-                cfg, self.pctx, backend, out_shardings=decode_out)
+                cfg, self.pctx, backend, out_shardings=decode_out,
+                plan=self.plan)
             self._prefill = None
             # host mirrors: page-table rows, per-slot logical positions,
             # prefill cursors, slot phases, outstanding page reservations
@@ -246,7 +261,8 @@ class BatchScheduler:
                 self._release = jax.jit(ST.release_slot, out_shardings=state_sh)
             self._decode = ST.make_decode_fn(cfg, self.pctx, backend,
                                              self.moe_impl,
-                                             out_shardings=decode_out)
+                                             out_shardings=decode_out,
+                                             plan=self.plan)
             self._prefill = ST.make_prefill_fn(cfg, self.pctx, prefill_backend,
                                                self.moe_impl,
                                                out_shardings=prefill_out)

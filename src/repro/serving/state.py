@@ -325,7 +325,7 @@ pool_copy_page_jit = jax.jit(pool_copy_page)
 
 
 def make_paged_decode_fn(cfg, pctx: ParallelCtx, backend,
-                         out_shardings=None):
+                         out_shardings=None, plan=None):
     """The single jitted batched step of a *paged* server — decode and
     chunked prefill ride the same compiled function.
 
@@ -351,7 +351,7 @@ def make_paged_decode_fn(cfg, pctx: ParallelCtx, backend,
         seed = jnp.where(feed_mask, feed_seed, state.seeds)
         logits, pool, act = T.paged_decode_step(
             params, state.pool, state.page_table, tok[:, None], state.pos,
-            seed, write_pids, cfg, pctx, backend=backend)
+            seed, write_pids, cfg, pctx, backend=backend, plan=plan)
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
         st = dataclasses.replace(state, pool=pool, pos=state.pos + 1,
                                  tokens=nxt, seeds=seed)
@@ -363,7 +363,7 @@ def make_paged_decode_fn(cfg, pctx: ParallelCtx, backend,
 
 
 def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
-                   out_shardings=None):
+                   out_shardings=None, plan=None):
     """The single jit-compiled batched decode step over the whole batch.
 
     ``(params, state) -> (logits [slots,1,V], state', activity [slots])`` —
@@ -386,7 +386,7 @@ def make_decode_fn(cfg, pctx: ParallelCtx, backend, moe_impl: str,
         logits, cache, act = T.decode_step(
             params, state.cache, state.tokens[:, None], cfg, pctx,
             moe_impl=moe_impl, backend=backend, seeds=state.seeds,
-            with_activity=True,
+            with_activity=True, plan=plan,
         )
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
         return logits, dataclasses.replace(state, cache=cache, tokens=nxt), act

@@ -162,6 +162,36 @@ def test_sharded_paged_scheduler_bit_exact(spiking_setup, mesh, backend_cls):
 
 
 @needs_mesh
+@pytest.mark.parametrize("backend_cls", [IntegerBackend, PallasBackend])
+def test_sharded_fused_decode_head_parallel(spiking_setup, mesh, backend_cls):
+    """``decode_kernel='fused'`` on the (2, 4) mesh: the megakernel's
+    attention stage runs head-parallel inside shard_map (per-shard global
+    ``h0`` offsets, column-sliced Q/K/V), the FFN tail rides the row/col-
+    parallel spiking linears — and the whole serve decodes the
+    single-device *unfused* integer oracle's tokens bit-for-bit, dense and
+    paged, with exactly one decode compile."""
+    from repro.distributed import Executor
+
+    cfg, params = spiking_setup
+    prompts = [_prompt(i, 3 + (2 * i) % 5) for i in range(4)]
+    ref, _ = _oracle_run(cfg, params, prompts, 5)
+
+    ex = Executor(params, cfg, backend_cls(), mesh)
+    outs, stats = ex.serve(prompts, max_new=5, slots=2, cache_len=32,
+                           seed=100, decode_kernel="fused")
+    assert outs == ref, f"sharded fused {backend_cls.__name__} diverged"
+    assert (stats.data_shards, stats.model_shards) == (2, 4)
+    sch = ex.scheduler(slots=2, cache_len=32, decode_kernel="fused")
+    assert sch.plan.fused
+    assert sch._decode._cache_size() == 1, "sharded fused decode recompiled"
+
+    # the paged megakernel rides the same head-parallel shard over the pool
+    pouts, _ = ex.serve(prompts, max_new=5, slots=2, cache_len=32, seed=100,
+                        paged=True, page_len=8, decode_kernel="fused")
+    assert pouts == ref, f"sharded paged fused {backend_cls.__name__} diverged"
+
+
+@needs_mesh
 def test_sharded_preemption_matches_single_device(spiking_setup, mesh):
     """Explicit mid-run eviction with requeue (preemption) replays the same
     way sharded and unsharded."""

@@ -27,12 +27,14 @@ assertions.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.engine import IntegerBackend, PallasBackend, ReferenceBackend
 from repro.kernels import ops as KOPS
 from repro.kernels import ref as KREF
+from repro.kernels.plan import AttnSpec, KVView
 
 INT = IntegerBackend()
 PAL = PallasBackend()
@@ -94,16 +96,20 @@ def test_ssa_decode_pallas_matches_integer_with_h0(t, l, d, h, seed, h0):
     v = _bern(ks[2], 0.5, (t, b, h, l, d))
     slot_keys = jax.random.randint(ks[3], (b, 2), 0, 2**31 - 1,
                                    jnp.int32).astype(jnp.uint32)
-    out_i = INT.ssa_attention_decode(slot_keys, q, k, v, i_max=l, h0=h0)
-    out_p = PAL.ssa_attention_decode(slot_keys, q, k, v, i_max=l, h0=h0)
+    view = KVView.dense(k, v)
+    out_i = INT.decode_attention(view, q, AttnSpec(i_max=l, h0=h0),
+                                 slot_keys=slot_keys)
+    out_p = PAL.decode_attention(view, q, AttnSpec(i_max=l, h0=h0),
+                                 slot_keys=slot_keys)
     _eq(out_i, out_p, f"ssa_decode t={t} l={l} d={d} h={h} h0={h0}")
     if h % 2 == 0:  # sharding by heads reproduces the full call exactly
         half = h // 2
         parts = [
-            PAL.ssa_attention_decode(
-                slot_keys, q[:, :, s * half:(s + 1) * half],
-                k[:, :, s * half:(s + 1) * half],
-                v[:, :, s * half:(s + 1) * half], i_max=l, h0=h0 + s * half)
+            PAL.decode_attention(
+                KVView.dense(k[:, :, s * half:(s + 1) * half],
+                             v[:, :, s * half:(s + 1) * half]),
+                q[:, :, s * half:(s + 1) * half],
+                AttnSpec(i_max=l, h0=h0 + s * half), slot_keys=slot_keys)
             for s in range(2)
         ]
         _eq(jnp.concatenate(parts, axis=2), out_p, "h0 shard split diverged")
@@ -133,10 +139,10 @@ def test_ssa_decode_paged_matches_integer_and_dense(t, page_len, mp, d, hkv,
     slot_keys = jax.random.randint(ks[5], (b, 2), 0, 2**31 - 1,
                                    jnp.int32).astype(jnp.uint32)
     i_max = mp * page_len
-    out_i = INT.ssa_attention_decode_paged(slot_keys, q, kpool, vpool, table,
-                                           i_max=i_max, h0=h0)
-    out_p = PAL.ssa_attention_decode_paged(slot_keys, q, kpool, vpool, table,
-                                           i_max=i_max, h0=h0)
+    view = KVView.from_pool(kpool, vpool, table)
+    spec = AttnSpec(i_max=i_max, h0=h0, groups=h // kv)
+    out_i = INT.decode_attention(view, q, spec, slot_keys=slot_keys)
+    out_p = PAL.decode_attention(view, q, spec, slot_keys=slot_keys)
     _eq(out_i, out_p, f"paged decode pl={page_len} mp={mp} h={h} kv={kv}")
     # dense equivalence over the gathered view
     kf = KOPS.gather_kv_pages(kpool, table)
@@ -144,8 +150,195 @@ def test_ssa_decode_paged_matches_integer_and_dense(t, page_len, mp, d, hkv,
     if kv != h:
         kf = jnp.repeat(kf, h // kv, axis=2)
         vf = jnp.repeat(vf, h // kv, axis=2)
-    dense = INT.ssa_attention_decode(slot_keys, q, kf, vf, i_max=i_max, h0=h0)
+    dense = INT.decode_attention(KVView.dense(kf, vf), q,
+                                 AttnSpec(i_max=i_max, h0=h0),
+                                 slot_keys=slot_keys)
     _eq(out_p, dense, "paged != dense over materialised cache")
+
+
+# ---------------------------------------------------------------------------
+# Fused decode layer (one megakernel per decoder layer) vs the integer oracle
+# ---------------------------------------------------------------------------
+
+
+def _layer_ws(key, dims, bias):
+    """One dyadic-grid weight dict per (d_in, d_out) stage — quarter-grid
+    biases keep every backend's arithmetic exact (see module docstring)."""
+    out = []
+    for i, (di, do) in enumerate(dims):
+        kw, kb = jax.random.split(jax.random.fold_in(key, i))
+        b = (jax.random.randint(kb, (do,), -4, 5, jnp.int32)
+             .astype(jnp.float32) * 0.25) if bias else None
+        out.append({"w": _dyadic_weights(kw, di, do), "b": b})
+    return out
+
+
+def _slice_cols(p, lo, hi):
+    """Column-shard one weight dict (what the TP shards hold)."""
+    return {"w": p["w"][:, lo:hi],
+            "b": None if p["b"] is None else p["b"][lo:hi]}
+
+
+@settings(**_SET)
+@given(t=st.integers(1, 2), l=st.sampled_from([4, 16]),
+       hkv=st.sampled_from([(2, 2), (4, 2)]),
+       seed=st.integers(0, 2**31 - 1), bias=st.booleans(), mlp=st.booleans())
+def test_fused_decode_layer_dense_matches_integer_oracle(t, l, hkv, seed,
+                                                         bias, mlp):
+    """The dense megakernel == the integer fused-layer oracle bit-for-bit
+    (residual out AND new K/V trains) for any cache length, GQA grouping,
+    bias/MLP combination — and the head-sharded ``h0`` split of the
+    attention stage (column-sliced Q/K/V, ``with_tail=False``) concatenates
+    to the full launch exactly (the tensor-parallel shard contract)."""
+    h, kv = hkv
+    d, hd, d_ff = 16, 8, 24
+    b = 2
+    ks = jax.random.split(_key(seed), 5)
+    s = _bern(ks[0], 0.5, (t, b, d)).astype(jnp.float32)
+    pos = jax.random.randint(ks[1], (b,), 0, l, jnp.int32)
+    live = (jnp.arange(l)[None, :] < pos[:, None]).astype(jnp.uint8)
+    sk = _bern(ks[2], 0.4, (b, t, l, kv, hd)) * live[:, None, :, None, None]
+    sv = _bern(ks[3], 0.5, (b, t, l, kv, hd)) * live[:, None, :, None, None]
+    slot_keys = jax.random.randint(ks[4], (b, 2), 0, 2**31 - 1,
+                                   jnp.int32).astype(jnp.uint32)
+    wq, wk, wv, wo, wi, wo2 = _layer_ws(
+        _key(seed ^ 0xA5A5), [(d, h * hd), (d, kv * hd), (d, kv * hd),
+                              (h * hd, d), (d, d_ff), (d_ff, d)], bias)
+    view = KVView.dense(sk, sv)
+    args = (slot_keys, s, view, pos, wq, wk, wv, wo, wi, wo2)
+    out_i = INT.decode_layer_fused(*args, hd=hd, with_mlp=mlp)
+    out_p = PAL.decode_layer_fused(*args, hd=hd, with_mlp=mlp)
+    for gi, gp, name in zip(out_i, out_p, ("s_out", "k_new", "v_new")):
+        _eq(gi, gp, f"fused dense {name} t={t} l={l} h={h} kv={kv}")
+    # attention-stage building block + TP h0 shard split
+    a_full, kn, vn = PAL.decode_layer_fused(
+        slot_keys, s, view, pos, wq, wk, wv, hd=hd, with_tail=False)
+    _eq(a_full, INT.decode_layer_fused(
+        slot_keys, s, view, pos, wq, wk, wv, hd=hd, with_tail=False)[0],
+        "fused with_tail=False diverged from oracle")
+    hloc, kvloc = h // 2, kv // 2
+    parts = [
+        PAL.decode_layer_fused(
+            slot_keys, s,
+            KVView.dense(sk[:, :, :, sh * kvloc:(sh + 1) * kvloc],
+                         sv[:, :, :, sh * kvloc:(sh + 1) * kvloc]),
+            pos,
+            _slice_cols(wq, sh * hloc * hd, (sh + 1) * hloc * hd),
+            _slice_cols(wk, sh * kvloc * hd, (sh + 1) * kvloc * hd),
+            _slice_cols(wv, sh * kvloc * hd, (sh + 1) * kvloc * hd),
+            hd=hd, h0=sh * hloc, with_tail=False)
+        for sh in range(2)
+    ]
+    _eq(jnp.concatenate([p[0] for p in parts], axis=-1), a_full,
+        "h0 shard split of fused attention stage diverged")
+    _eq(jnp.concatenate([p[1] for p in parts], axis=2), kn,
+        "h0 shard split of fused k_new diverged")
+    _eq(jnp.concatenate([p[2] for p in parts], axis=2), vn,
+        "h0 shard split of fused v_new diverged")
+
+
+@settings(**_SET)
+@given(t=st.integers(1, 2), page_len=st.sampled_from([4, 8]),
+       mp=st.integers(1, 3), hkv=st.sampled_from([(2, 2), (4, 2)]),
+       seed=st.integers(0, 2**31 - 1), mlp=st.booleans())
+def test_fused_decode_layer_paged_matches_integer_oracle(t, page_len, mp,
+                                                         hkv, seed, mlp):
+    """The paged megakernel (scalar-prefetch page-table grid) == the paged
+    integer fused-layer oracle for any page geometry, null-page pattern and
+    GQA grouping — under the serving invariants the scheduler maintains
+    (exclusive write pages, zero pre-scatter write slot)."""
+    h, kv = hkv
+    d, hd, d_ff = 16, 8, 24
+    b = 2
+    l = mp * page_len
+    n_pages = 4 + b * mp
+    ks = jax.random.split(_key(seed), 6)
+    s = _bern(ks[0], 0.5, (t, b, d)).astype(jnp.float32)
+    kpool = _bern(ks[1], 0.4, (n_pages, t, kv, page_len, hd))
+    vpool = _bern(ks[2], 0.5, (n_pages, t, kv, page_len, hd))
+    kpool = kpool.at[0].set(0)  # null page invariant
+    vpool = vpool.at[0].set(0)
+    # random shared read-only pages (>= 4) + null holes; each slot's write
+    # page (2 / 3) is exclusively owned, as CoW guarantees in serving
+    table = jax.random.randint(ks[3], (b, mp), 4, n_pages, jnp.int32)
+    table = jnp.where(jax.random.bernoulli(ks[4], 0.3, (b, mp)), 0, table)
+    pos = jax.random.randint(ks[5], (b,), 0, l, jnp.int32)
+    barange = jnp.arange(b)
+    write_pids = jnp.asarray([2, 3], jnp.int32)
+    table = table.at[barange, pos // page_len].set(write_pids)
+    off = pos % page_len
+    kpool = kpool.at[write_pids, :, :, off].set(0)  # pre-scatter zero slot
+    vpool = vpool.at[write_pids, :, :, off].set(0)
+    slot_keys = jax.random.randint(jax.random.fold_in(ks[5], 1), (b, 2), 0,
+                                   2**31 - 1, jnp.int32).astype(jnp.uint32)
+    wq, wk, wv, wo, wi, wo2 = _layer_ws(
+        _key(seed ^ 0x5A5A), [(d, h * hd), (d, kv * hd), (d, kv * hd),
+                              (h * hd, d), (d, d_ff), (d_ff, d)], True)
+    view = KVView.from_pool(kpool, vpool, table)
+    args = (slot_keys, s, view, pos, wq, wk, wv, wo, wi, wo2)
+    kw = dict(hd=hd, write_pids=write_pids, with_mlp=mlp)
+    out_i = INT.decode_layer_fused(*args, **kw)
+    out_p = PAL.decode_layer_fused(*args, **kw)
+    for gi, gp, name in zip(out_i, out_p, ("s_out", "k_new", "v_new")):
+        _eq(gi, gp, f"fused paged {name} pl={page_len} mp={mp} h={h} kv={kv}")
+    # TP h0 shard split over the pool's KV axis, with_tail=False
+    a_full = PAL.decode_layer_fused(
+        slot_keys, s, view, pos, wq, wk, wv, hd=hd, write_pids=write_pids,
+        with_tail=False)[0]
+    hloc, kvloc = h // 2, kv // 2
+    parts = [
+        PAL.decode_layer_fused(
+            slot_keys, s,
+            KVView.from_pool(kpool[:, :, sh * kvloc:(sh + 1) * kvloc],
+                             vpool[:, :, sh * kvloc:(sh + 1) * kvloc], table),
+            pos,
+            _slice_cols(wq, sh * hloc * hd, (sh + 1) * hloc * hd),
+            _slice_cols(wk, sh * kvloc * hd, (sh + 1) * kvloc * hd),
+            _slice_cols(wv, sh * kvloc * hd, (sh + 1) * kvloc * hd),
+            hd=hd, h0=sh * hloc, write_pids=write_pids, with_tail=False)[0]
+        for sh in range(2)
+    ]
+    _eq(jnp.concatenate(parts, axis=-1), a_full,
+        "h0 shard split of paged fused attention stage diverged")
+
+
+# ---------------------------------------------------------------------------
+# Deprecated decode shims — warn, and forward bit-exactly
+# ---------------------------------------------------------------------------
+
+
+def test_decode_shims_warn_and_forward_bit_exactly():
+    """``ssa_attention_decode`` / ``ssa_attention_decode_paged`` are
+    deprecation shims over ``decode_attention(view, q, spec)``: every
+    backend emits DeprecationWarning and returns the exact same bits."""
+    t, b, h, l, d = 2, 2, 2, 8, 16
+    ks = jax.random.split(_key(0), 6)
+    q = _bern(ks[0], 0.5, (t, b, h, 1, d))
+    k = _bern(ks[1], 0.4, (t, b, h, l, d))
+    v = _bern(ks[2], 0.5, (t, b, h, l, d))
+    slot_keys = jax.random.randint(ks[3], (b, 2), 0, 2**31 - 1,
+                                   jnp.int32).astype(jnp.uint32)
+    for be in (REF, INT, PAL):
+        with pytest.warns(DeprecationWarning, match="decode_attention"):
+            old = be.ssa_attention_decode(slot_keys, q, k, v, i_max=l, h0=1)
+        new = be.decode_attention(KVView.dense(k, v), q,
+                                  AttnSpec(i_max=l, h0=1),
+                                  slot_keys=slot_keys)
+        _eq(old, new, f"{be.name} dense decode shim diverged")
+    page_len, mp = 4, 2
+    kpool = _bern(ks[4], 0.4, (2 + b * mp, t, h, page_len, d))
+    vpool = _bern(ks[5], 0.5, (2 + b * mp, t, h, page_len, d))
+    kpool = kpool.at[0].set(0)
+    vpool = vpool.at[0].set(0)
+    table = jnp.asarray([[2, 3], [4, 0]], jnp.int32)
+    for be in (REF, INT, PAL):
+        with pytest.warns(DeprecationWarning, match="decode_attention"):
+            old = be.ssa_attention_decode_paged(slot_keys, q, kpool, vpool,
+                                                table, i_max=mp * page_len)
+        new = be.decode_attention(KVView.from_pool(kpool, vpool, table), q,
+                                  AttnSpec(i_max=mp * page_len, groups=1),
+                                  slot_keys=slot_keys)
+        _eq(old, new, f"{be.name} paged decode shim diverged")
 
 
 # ---------------------------------------------------------------------------
