@@ -445,6 +445,22 @@ def device_time(params: Any) -> float:
     return max(ts) if ts else 0.0
 
 
+def gdc_gain_summary(params: Any) -> float:
+    """Mean GDC gain across every programmed crossbar in a tree (1.0 if
+    nothing is programmed).
+
+    The serving telemetry reads this once per recalibration event — the
+    post-recal gain is the live health signal of the drift lifecycle: it
+    climbs between recalibrations exactly as the conductances decay and
+    snaps toward the drift-compensation factor when GDC runs.  One small
+    host read per (rare) recal, never on the decode hot path."""
+    gains = [
+        float(jnp.mean(leaf.gdc_gain))
+        for leaf in jax.tree.leaves(params, is_leaf=_is_state) if _is_state(leaf)
+    ]
+    return sum(gains) / len(gains) if gains else 1.0
+
+
 # ---------------------------------------------------------------------------
 # Serving drift policy
 # ---------------------------------------------------------------------------

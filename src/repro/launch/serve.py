@@ -35,8 +35,17 @@ with the serve summary.
 
 ``--http`` runs the :mod:`repro.server` front door instead of synthetic
 requests: ``POST /generate`` streams tokens over SSE through the same
-scheduler (admission control, per-tenant energy budgets, ``GET /stats``),
-until Ctrl-C; the serve summary (tok/s, J/token) prints on shutdown.
+scheduler (admission control, per-tenant energy budgets, ``GET /stats``,
+``GET /metrics`` Prometheus exposition), until Ctrl-C; the serve summary
+(tok/s, J/token) prints on shutdown.
+
+Observability (:mod:`repro.obs`): ``--trace-out events.jsonl`` appends
+request-lifecycle trace events (submit/admit/prefill-chunk/first-token/
+decode/preempt/finish, one JSON object per line — convert with
+``repro.obs.perfetto_export`` for ``ui.perfetto.dev``);
+``--profile-steps N`` captures N decode steps with ``jax.profiler`` into
+``--profile-dir``.  Both are opt-in and host-side only: telemetry never
+changes a decoded token, a booked joule, or the compile count.
 """
 
 from __future__ import annotations
@@ -54,6 +63,7 @@ from repro.configs.registry import get_config, reduced_config
 from repro.engine import get_backend
 from repro.launch.mesh import make_serving_mesh, make_test_mesh, parse_mesh_spec
 from repro.models import transformer as T
+from repro.obs import JsonlSink, StepProfiler, Telemetry
 from repro.parallel import sharding as SH
 from repro.serving import BatchScheduler
 
@@ -79,6 +89,9 @@ def serve(
     http: bool = False,
     host: str = "127.0.0.1",
     port: int = 8000,
+    trace_out: str = "",
+    profile_steps: int = 0,
+    profile_dir: str = "/tmp/xpike-profile",
 ):
     """Serve ``n_requests`` synthetic prompts; returns their outputs in
     submission order (continuous batching: a finished slot is refilled from
@@ -130,6 +143,20 @@ def serve(
         )
     if sch.plan is not None:
         print(f"[serve] decode kernel: {sch.plan.describe()}")
+
+    # telemetry bundle: metrics registry + tracer + flight recorder, plus
+    # the opt-in JSONL trace sink and jax.profiler window.  Host-side only
+    # — attaching it never recompiles or changes a token.
+    profiler = None
+    if profile_steps > 0:
+        profiler = StepProfiler(profile_steps, profile_dir)
+        print(f"[serve] profiling {profile_steps} decode steps -> "
+              f"{profile_dir} (jax.profiler)")
+    obs = Telemetry.create(profiler=profiler)
+    if trace_out:
+        obs.tracer.add_sink(JsonlSink(trace_out))
+        print(f"[serve] tracing request lifecycle -> {trace_out} (JSONL)")
+    sch.attach_obs(obs)
     if http:
         _serve_http(sch, host=host, port=port)
         return []
@@ -140,9 +167,9 @@ def serve(
         for i in range(n_requests)
     ]
     rids = [sch.submit(p, max_new, seed=seed + i) for i, p in enumerate(prompts)]
-    t0 = time.time()
+    t0 = time.perf_counter()  # duration: monotonic, not wall clock
     outs = sch.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     st = sch.stats
     print(f"[serve] served {st.requests} requests, {st.decoded_tokens} tokens "
           f"in {dt:.2f}s ({st.tokens_per_sec:.1f} tok/s, "
@@ -176,8 +203,8 @@ def _serve_http(sch: BatchScheduler, *, host: str, port: int) -> None:
         srv = HttpFrontDoor(FrontDoor(sch), host=host, port=port)
         await srv.start()
         print(f"[serve] HTTP front door on http://{srv.host}:{srv.port} "
-              "(POST /generate, GET /stats, GET /healthz); Ctrl-C to stop",
-              flush=True)
+              "(POST /generate, GET /stats, GET /metrics, GET /healthz); "
+              "Ctrl-C to stop", flush=True)
         try:
             await srv._server.serve_forever()
         except asyncio.CancelledError:
@@ -185,13 +212,13 @@ def _serve_http(sch: BatchScheduler, *, host: str, port: int) -> None:
         finally:
             await srv.stop()
 
-    t0 = time.time()
+    t0 = time.perf_counter()  # duration: monotonic, not wall clock
     try:
         asyncio.run(_run())
     except KeyboardInterrupt:
         pass
     st = sch.stats
-    st.wall_s += time.time() - t0
+    st.wall_s += time.perf_counter() - t0
     print(f"\n[serve] served {st.requests} requests, {st.decoded_tokens} "
           f"tokens ({st.tokens_per_sec:.1f} tok/s, {st.decode_steps} batched "
           f"decode steps, {st.admissions} admissions)")
@@ -230,6 +257,16 @@ def main(argv=None):
     ap.add_argument("--http", action="store_true", default=False,
                     help="serve over HTTP/SSE (POST /generate streams "
                          "tokens) instead of running synthetic requests")
+    ap.add_argument("--trace-out", default="",
+                    help="append request-lifecycle trace events to this "
+                         "JSONL file (repro.obs; perfetto_export converts "
+                         "it for ui.perfetto.dev)")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="capture this many decode steps with jax.profiler "
+                         "(0 = off)")
+    ap.add_argument("--profile-dir", default="/tmp/xpike-profile",
+                    help="jax.profiler trace output directory "
+                         "(--profile-steps)")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8000)
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
@@ -245,7 +282,8 @@ def main(argv=None):
           program=a.program, drift_step_s=a.drift_step,
           recal_every_s=a.recal_every, mesh_spec=a.mesh, paged=a.paged,
           page_len=a.page_len, n_pages=a.pages, decode_kernel=a.decode_kernel,
-          http=a.http, host=a.host, port=a.port)
+          http=a.http, host=a.host, port=a.port, trace_out=a.trace_out,
+          profile_steps=a.profile_steps, profile_dir=a.profile_dir)
 
 
 if __name__ == "__main__":

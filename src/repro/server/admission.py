@@ -30,7 +30,8 @@ to do and then drives :class:`repro.serving.BatchScheduler`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 # decision tags recorded per request event
 ADMIT = "admit"
@@ -94,12 +95,27 @@ class AdmissionController:
 
     def __init__(self, policies: Optional[Dict[str, TenantPolicy]] = None,
                  default: Optional[TenantPolicy] = None,
-                 max_records: int = 4096):
+                 max_records: int = 4096, metrics=None):
         self._policies = dict(policies or {})
         self._default = default or TenantPolicy()
         self.tenants: Dict[str, TenantState] = {}
-        self.records: List[AdmissionRecord] = []
-        self._max_records = max_records
+        # decision log: a bounded ring — a long-lived server keeps the
+        # *recent* window for /stats and postmortems, while the monotone
+        # per-decision counters below carry the lifetime totals
+        self.records: Deque[AdmissionRecord] = deque(maxlen=max_records)
+        # labeled admit/defer:*/preempt counters (repro.obs registry);
+        # None = uninstrumented, the controller stays dependency-free
+        self._c_decisions = None
+        if metrics is not None:
+            self.bind_metrics(metrics)
+
+    def bind_metrics(self, metrics) -> None:
+        """Attach a :class:`repro.obs.MetricsRegistry`: every decision
+        increments ``xpike_admission_decisions_total{decision,tenant}``."""
+        self._c_decisions = metrics.counter(
+            "admission_decisions_total",
+            "admission-control events by decision tag",
+            ("decision", "tenant"))
 
     # -- tenant bookkeeping --------------------------------------------
 
@@ -175,8 +191,8 @@ class AdmissionController:
     def record(self, request_id: int, tenant: str, decision: str,
                detail: str = "") -> None:
         self.records.append(AdmissionRecord(request_id, tenant, decision, detail))
-        if len(self.records) > self._max_records:
-            del self.records[: len(self.records) - self._max_records]
+        if self._c_decisions is not None:
+            self._c_decisions.inc(1.0, decision, tenant)
 
     def decisions(self, request_id: Optional[int] = None) -> List[AdmissionRecord]:
         if request_id is None:

@@ -42,10 +42,18 @@ from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import Telemetry
+from repro.obs import trace as TR
 from repro.server import admission as ADM
 from repro.server.admission import AdmissionController, TenantPolicy
 
 PENDING, RUNNING, DONE, FAILED = "pending", "running", "done", "failed"
+
+# all front-door interval math runs on the monotonic clock: TTFT, latency,
+# token gaps and bucket-refill deltas must never jump with NTP/wall-clock
+# slew.  Wall-clock time.time() survives only where an *epoch timestamp*
+# is wanted (trace events stamp both, see repro.obs.trace).
+_now = time.perf_counter
 
 
 class QueueFull(RuntimeError):
@@ -63,7 +71,7 @@ class RequestResult:
     ttft_s: float  # submit -> first streamed token
     latency_s: float  # submit -> last token
     preemptions: int
-    token_times: List[float]  # wall time each token was streamed
+    token_times: List[float]  # monotonic stamp each token was streamed
 
 
 @dataclasses.dataclass
@@ -141,11 +149,41 @@ class FrontDoor:
         default_policy: Optional[TenantPolicy] = None,
         max_queue: int = 256,
         idle_s: float = 0.002,
+        telemetry: Optional[Telemetry] = None,
+        enable_telemetry: bool = True,
     ):
         self.sch = scheduler
         self.adm = AdmissionController(policies, default_policy)
         self.max_queue = max_queue
         self.idle_s = idle_s
+        # one Telemetry bundle spans the whole stack: the scheduler's if it
+        # already has one, else ``telemetry``, else a fresh default bundle
+        # (enable_telemetry=False opts out entirely — the overhead
+        # benchmark's baseline leg, see benchmarks/serving_load.py)
+        self.obs: Optional[Telemetry] = None
+        if enable_telemetry:
+            self.obs = (getattr(scheduler, "obs", None) or telemetry
+                        or Telemetry.create())
+            if getattr(scheduler, "obs", None) is None:
+                scheduler.attach_obs(self.obs)
+            self.adm.bind_metrics(self.obs.metrics)
+            m = self.obs.metrics
+            self._h_ttft = m.histogram(
+                "ttft_seconds", "submit to first streamed token")
+            self._h_tpot = m.histogram(
+                "tpot_seconds", "gap between consecutive streamed tokens")
+            self._g_pending = m.gauge(
+                "frontdoor_queue_depth", "requests pending admission")
+            self._g_running = m.gauge(
+                "frontdoor_running", "requests holding a scheduler slot")
+            self._c_requests = m.counter(
+                "frontdoor_requests_total", "terminal request outcomes",
+                ("outcome",))
+            self._c_preempt = m.counter(
+                "frontdoor_preemptions_total", "energy-SLO preemptions")
+            self._g_credit = m.gauge(
+                "tenant_energy_credit_joules",
+                "joule token-bucket level per metered tenant", ("tenant",))
         self._intake: Deque[_FrontRequest] = deque()  # loop -> pump handoff
         self._pending: Dict[str, Deque[_FrontRequest]] = {}
         self._running: Dict[int, _FrontRequest] = {}  # scheduler rid -> req
@@ -153,7 +191,7 @@ class FrontDoor:
         self._results: List[RequestResult] = []
         self._next_fid = 0
         self._pending_count = 0  # intake + per-tenant queues (loop-side gate)
-        self._last_refill = time.time()
+        self._last_refill = _now()
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._task: Optional[asyncio.Task] = None
         self._stopping = False
@@ -219,9 +257,13 @@ class FrontDoor:
         req = _FrontRequest(
             fid=fid, tenant=tenant, prompt=prompt_np, max_new=max_new,
             seed=fid if seed is None else seed, q=asyncio.Queue())
-        req.t_submit = time.time()
+        req.t_submit = _now()
         self._requests[fid] = req
         self._intake.append(req)
+        if self.obs is not None:
+            self.obs.trace(TR.SUBMIT, fid=fid, tenant=tenant,
+                           prompt_len=int(prompt_np.shape[0]),
+                           max_new=max_new)
         return TokenStream(req)
 
     # -- introspection --------------------------------------------------
@@ -251,7 +293,7 @@ class FrontDoor:
             }
             for name, t in self.adm.tenants.items()
         }
-        return {
+        out = {
             "scheduler": sched,
             "tenants": tenants,
             "pending": self._pending_count,
@@ -260,8 +302,13 @@ class FrontDoor:
             "failed": self.failed,
             "preemptions": self.preemptions,
             "decisions": [dataclasses.asdict(r)
-                          for r in self.adm.records[-64:]],
+                          for r in list(self.adm.records)[-64:]],
         }
+        if self.obs is not None:
+            # the full registry snapshot nests under "metrics" — the same
+            # families GET /metrics exposes, as structured JSON
+            out["metrics"] = self.obs.metrics.snapshot()
+        return out
 
     # -- pump (worker thread) -------------------------------------------
 
@@ -304,7 +351,7 @@ class FrontDoor:
         """One admission + decode + streaming round.  Returns True when any
         work happened (intake, admission, a decode step, streamed tokens)."""
         busy = False
-        now = time.time()
+        now = _now()
         self.adm.refill(now - self._last_refill)
         self._last_refill = now
         # 1. drain the loop->pump intake into per-tenant FIFO queues
@@ -339,6 +386,10 @@ class FrontDoor:
                 self.adm.record(req.fid, req.tenant, ADM.PREEMPT_ENERGY,
                                 f"credit={self.adm.tenant(req.tenant).credit_j:.3e}J "
                                 f"streamed={req.streamed}")
+                if self.obs is not None:
+                    self._c_preempt.inc()
+                    self.obs.trace(TR.PREEMPT, fid=req.fid, rid=rid,
+                                   tenant=req.tenant, streamed=req.streamed)
                 self._tenant_queue(req.tenant).appendleft(req)
                 busy = True
         # 3. admission: strict priority + token fairness, energy throttle,
@@ -349,6 +400,12 @@ class FrontDoor:
             self.sch.step()
             busy = True
             self._stream_new_tokens()
+        if self.obs is not None:
+            self._g_pending.set(float(self._pending_count))
+            self._g_running.set(float(len(self._running)))
+            for name, st in self.adm.tenants.items():
+                if st.policy.energy_budget_j is not None:
+                    self._g_credit.set(st.credit_j, name)
         return busy
 
     def _admit(self) -> bool:
@@ -405,6 +462,10 @@ class FrontDoor:
             adm.tenant(name).inflight += 1
             decision = ADM.READMIT if req.preemptions else ADM.ADMIT
             adm.record(req.fid, name, decision, f"rid={rid}")
+            if self.obs is not None:
+                self.obs.trace(
+                    TR.READMIT if req.preemptions else TR.ADMIT,
+                    fid=req.fid, rid=rid, tenant=name)
             admitted = True
         return admitted
 
@@ -422,7 +483,7 @@ class FrontDoor:
 
     def _stream_new_tokens(self) -> None:
         sch = self.sch
-        now = time.time()
+        now = _now()
         done: List[int] = []
         for rid, req in self._running.items():
             # energy: charge this rid's delta to the tenant bucket
@@ -449,6 +510,15 @@ class FrontDoor:
                 else:
                     if req.t_first is None:
                         req.t_first = now
+                        if self.obs is not None:
+                            self._h_ttft.observe(now - req.t_submit)
+                            self.obs.trace(TR.FIRST_TOKEN, fid=req.fid,
+                                           rid=rid, tenant=req.tenant,
+                                           ttft_s=now - req.t_submit)
+                    elif self.obs is not None and req.token_times:
+                        gap = now - req.token_times[-1]
+                        if gap > 0:  # same-step tokens share one stamp
+                            self._h_tpot.observe(gap)
                     req.tokens.append(tok)
                     req.token_times.append(now)
                     req.streamed += 1
@@ -468,9 +538,21 @@ class FrontDoor:
                 if self.sch.slot_of(rid) is not None:
                     self.sch.preempt(rid)
                 self.failed += 1
+                if self.obs is not None:
+                    self._c_requests.inc(1.0, "failed")
+                    self.obs.trace(TR.FINISH, fid=req.fid, rid=rid,
+                                   tenant=req.tenant, outcome="failed",
+                                   error=req.error)
                 self._finish_signal(req)
                 continue
             req.t_done = now
+            if self.obs is not None:
+                self._c_requests.inc(1.0, "completed")
+                self.obs.trace(TR.FINISH, fid=req.fid, rid=rid,
+                               tenant=req.tenant, outcome="completed",
+                               tokens=req.streamed,
+                               latency_s=now - req.t_submit,
+                               energy_j=req.energy_j)
             req.result = RequestResult(
                 request_id=req.fid, tenant=req.tenant, tokens=list(req.tokens),
                 energy_j=req.energy_j,

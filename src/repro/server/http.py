@@ -25,8 +25,16 @@ streams, serving three routes:
 ``GET /stats``
     JSON: scheduler :class:`~repro.serving.ServeStats` (including
     ``j_per_token`` / ``tokens_per_sec``), per-tenant admission state
-    (energy buckets, fairness counters) and the recent admission
-    decisions.
+    (energy buckets, fairness counters), the recent admission decisions
+    and — when telemetry is on — the full metrics-registry snapshot
+    under ``"metrics"``.
+
+``GET /metrics``
+    Prometheus text exposition (format 0.0.4) of the shared
+    :class:`repro.obs.MetricsRegistry`: decode-step latency histograms,
+    TTFT/TPOT, page-pool occupancy, admission decisions, device clock,
+    GDC gain, energy counters.  404 when the front door was built with
+    ``enable_telemetry=False``.
 
 ``GET /healthz``
     ``{"ok": true}`` liveness probe.
@@ -42,6 +50,7 @@ import dataclasses
 import json
 from typing import Any, AsyncIterator, Dict, Optional, Tuple
 
+from repro.obs import render_prometheus
 from repro.server.frontdoor import FrontDoor, QueueFull
 
 MAX_BODY = 8 * 1024 * 1024
@@ -151,6 +160,15 @@ class HttpFrontDoor:
                 writer.write(_json_response(200, {"ok": True}))
             elif path == "/stats" and method == "GET":
                 writer.write(_json_response(200, self.front.stats_dict()))
+            elif path == "/metrics" and method == "GET":
+                if self.front.obs is None:
+                    writer.write(_json_response(
+                        404, {"error": "telemetry disabled"}))
+                else:
+                    text = render_prometheus(self.front.obs.metrics)
+                    writer.write(_response(
+                        200, text.encode(),
+                        "text/plain; version=0.0.4; charset=utf-8"))
             elif path == "/generate":
                 if method != "POST":
                     writer.write(_json_response(

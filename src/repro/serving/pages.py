@@ -36,7 +36,7 @@ fresh page (``state.pool_copy_page``) and repoints its table.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -69,6 +69,16 @@ class PagePool:
         self.prefix_misses = 0
         self.cow_copies = 0
         self.peak_in_use = 0
+        # invariant-guard hook: called with the violation message right
+        # before a double-free / use-after-free raise, so a flight
+        # recorder (repro.obs) can dump a postmortem while the rings still
+        # hold the events that led here.  The raise always proceeds.
+        self.on_violation: Optional[Callable[[str], None]] = None
+
+    def _violate(self, msg: str) -> str:
+        if self.on_violation is not None:
+            self.on_violation(msg)
+        return msg
 
     # -- capacity -------------------------------------------------------
 
@@ -112,9 +122,10 @@ class PagePool:
     def retain(self, pid: int) -> None:
         """Add a reference to a live page (prefix hit / cache registration)."""
         if pid in (NULL_PAGE, TRASH_PAGE):
-            raise ValueError(f"cannot retain reserved page {pid}")
+            raise ValueError(self._violate(f"cannot retain reserved page {pid}"))
         if self.refcount[pid] <= 0:
-            raise ValueError(f"retain of dead page {pid} (use-after-free)")
+            raise ValueError(
+                self._violate(f"retain of dead page {pid} (use-after-free)"))
         self.refcount[pid] += 1
 
     def release(self, pid: int) -> bool:
@@ -122,9 +133,10 @@ class PagePool:
         caller must zero it on device before it can be reused).  Releasing
         an already-free page raises — the double-free guard."""
         if pid in (NULL_PAGE, TRASH_PAGE):
-            raise ValueError(f"cannot release reserved page {pid}")
+            raise ValueError(
+                self._violate(f"cannot release reserved page {pid}"))
         if self.refcount[pid] <= 0:
-            raise ValueError(f"double free of page {pid}")
+            raise ValueError(self._violate(f"double free of page {pid}"))
         self.refcount[pid] -= 1
         if self.refcount[pid] == 0:
             self._free.append(int(pid))

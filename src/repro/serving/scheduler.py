@@ -61,6 +61,8 @@ from repro.energy import model as EM
 from repro.kernels.plan import build_decode_plan
 from repro.models import transformer as T
 from repro.models.moe import ParallelCtx
+from repro.obs import Telemetry
+from repro.obs import trace as TR
 from repro.serving import state as ST
 from repro.serving.pages import PagePool
 
@@ -119,9 +121,17 @@ class ServeStats:
 
     @property
     def j_per_token(self) -> float:
-        """Metered joules per decoded token (0.0 when nothing was metered —
-        non-spiking archs book no energy)."""
-        return self.energy_j / max(self.decoded_tokens, 1)
+        """Metered joules per decoded token.
+
+        Same guarded-denominator convention as :attr:`tokens_per_sec` /
+        :attr:`decode_tokens_per_sec` (``max(x, 1e-9)``).  Zero-token
+        behaviour: with nothing decoded *and* nothing metered this is
+        ``0.0``; with booked energy but zero decoded tokens (a
+        prefill-only or all-preempted run) it is astronomically large —
+        deliberately, since the true cost per delivered token of such a
+        run is unbounded, and the old ``max(decoded_tokens, 1)`` floor
+        silently under-reported it as ``energy_j``."""
+        return self.energy_j / max(self.decoded_tokens, 1e-9)
 
     @property
     def decode_tokens_per_sec(self) -> float:
@@ -163,6 +173,7 @@ class BatchScheduler:
         page_len: int = 8,
         n_pages: Optional[int] = None,
         decode_kernel: str = "auto",
+        obs: Optional[Telemetry] = None,
     ):
         self.placement = placement  # repro.distributed.Executor | None
         if placement is not None:
@@ -291,6 +302,130 @@ class BatchScheduler:
         else:
             self._e_token_pj = 0.0
         self._e_event_pj = EM.decode_synapse_energy_pj()
+        # telemetry: host-side only (see repro.obs) — binding it can never
+        # touch the jitted step or change a token/joule
+        self.obs: Optional[Telemetry] = None
+        self._stat_marks: Dict[str, float] = {}
+        self._pool_marks: Dict[str, float] = {}
+        if obs is not None:
+            self.attach_obs(obs)
+
+    # -- telemetry -------------------------------------------------------
+
+    # ServeStats fields mirrored into monotone counters (single source of
+    # truth stays ServeStats; the registry syncs by delta once per step)
+    _STAT_COUNTERS = (
+        ("decode_steps", "decode_steps_total",
+         "batched decode_step invocations"),
+        ("decoded_tokens", "decoded_tokens_total", "greedy tokens decoded"),
+        ("prefill_tokens", "prefill_tokens_total",
+         "prompt positions prefilled (chunked or batch-1)"),
+        ("admissions", "admissions_total", "requests admitted into slots"),
+        ("evictions", "evictions_total", "slot evictions (finish or preempt)"),
+        ("spike_events", "spike_events_total",
+         "measured residual-stream spike events"),
+        ("energy_j", "energy_joules_total",
+         "metered inference energy (spike events x op energies)"),
+        ("recalibrations", "gdc_recalibrations_total",
+         "GDC recalibrations run by the drift policy"),
+        ("prefix_hits", "prefix_page_hits_total",
+         "prefix-cache page hits across admissions"),
+        ("prefix_hit_tokens", "prefix_hit_tokens_total",
+         "prompt positions skipped via shared pages"),
+        ("cow_copies", "cow_copies_total", "copy-on-write page duplications"),
+    )
+
+    def attach_obs(self, obs: Telemetry) -> None:
+        """Install (or replace) the telemetry bundle: resolve metric
+        handles once and arm the page-pool guard dump sites."""
+        self.obs = obs
+        m = obs.metrics
+        self._h_step = m.histogram(
+            "decode_step_seconds", "batched decode_step latency")
+        self._g_active = m.gauge("active_slots", "slots holding a request")
+        self._g_queue = m.gauge(
+            "scheduler_queue_depth", "submitted-not-yet-admitted requests")
+        self._g_clock = m.gauge(
+            "device_clock_seconds", "PCM device clock (drift lifecycle)")
+        self._g_gain = m.gauge(
+            "gdc_gain_mean", "mean GDC gain across programmed crossbars "
+            "(set at bind and after each recalibration)")
+        self._g_pages_in_use = m.gauge(
+            "pool_pages_in_use", "physical KV pages referenced")
+        self._g_pages_free = m.gauge(
+            "pool_pages_free", "physical KV pages on the free list")
+        self._c_lookups = m.counter(
+            "prefix_lookups_total", "prefix-cache block lookups",
+            ("result",))
+        self._stat_counters = {
+            field: m.counter(name, help) for field, name, help in
+            self._STAT_COUNTERS}
+        self._stat_marks = {f: 0.0 for f, _, _ in self._STAT_COUNTERS}
+        self._pool_marks = {"hit": 0.0, "miss": 0.0}
+        self._g_clock.set(self._t_device)
+        if self._programmed:
+            self._g_gain.set(AD.gdc_gain_summary(self.params))
+        self._sync_stat_counters()
+        self._arm_pool_guard()
+
+    def detach_obs(self) -> None:
+        """Remove the telemetry bundle (the exact inverse of
+        :meth:`attach_obs`): metric handles are dropped, the page-pool
+        guard hook is disarmed, and subsequent runs book nothing.  The
+        registry itself is untouched — counters keep their lifetime
+        values.  A later re-attach rebases the delta marks at zero and
+        mirrors the scheduler's *current* ServeStats as fresh deltas,
+        so call :meth:`reset` between detach and a re-attach to the
+        same registry to avoid double-booking the interlude."""
+        self.obs = None
+        self._stat_counters = {}
+        self._stat_marks = {}
+        if self.paged:
+            self.pages.on_violation = None
+
+    def _arm_pool_guard(self) -> None:
+        if self.obs is not None and self.paged:
+            self.pages.on_violation = self._on_guard
+
+    def _on_guard(self, reason: str) -> None:
+        """Invariant-guard dump site (PagePool double-free/use-after-free,
+        evict-unoccupied): postmortem first, the raise proceeds after."""
+        if self.obs is not None:
+            self.obs.guard_dump(reason)
+
+    def _sync_stat_counters(self) -> None:
+        """Mirror ServeStats into the registry's counters by delta."""
+        st = self.stats
+        marks = self._stat_marks
+        for field, counter in self._stat_counters.items():
+            cur = float(getattr(st, field))
+            delta = cur - marks[field]
+            if delta > 0:
+                counter.inc(delta)
+                marks[field] = cur
+
+    def _obs_step(self, step_s: float, decoded: int) -> None:
+        """Per-decode-step telemetry: latency histogram, occupancy gauges,
+        counter sync, pool stats, profiler window."""
+        obs = self.obs
+        if obs is None:
+            return
+        self._h_step.observe(step_s)
+        self._g_active.set(sum(r is not None for r in self._slot_req))
+        self._g_queue.set(len(self._queue))
+        if self.paged:
+            pool = self.pages
+            self._g_pages_in_use.set(pool.in_use)
+            self._g_pages_free.set(pool.free_pages)
+            for result, cur in (("hit", pool.prefix_hits),
+                                ("miss", pool.prefix_misses)):
+                delta = cur - self._pool_marks[result]
+                if delta > 0:
+                    self._c_lookups.inc(delta, result)
+                    self._pool_marks[result] = cur
+        self._sync_stat_counters()
+        if obs.profiler is not None:
+            obs.profiler.tick()
 
     def _fresh_stats(self) -> ServeStats:
         if self.placement is None:
@@ -340,6 +475,12 @@ class BatchScheduler:
         self.request_spikes = {}
         self.stats = self._fresh_stats()
         self.stats.t_device_s = self._t_device
+        if self.obs is not None:
+            # counters are lifetime-monotone; only the delta marks rebase
+            # onto the fresh ServeStats / PagePool
+            self._stat_marks = {f: 0.0 for f, _, _ in self._STAT_COUNTERS}
+            self._pool_marks = {"hit": 0.0, "miss": 0.0}
+            self._arm_pool_guard()
 
     # -- request intake ------------------------------------------------
 
@@ -373,6 +514,9 @@ class BatchScheduler:
                       prompt_np=pnp, ckeys=ST.content_keys(pnp[:-1]))
         self._queue.append(req)
         self.stats.requests += 1
+        if self.obs is not None:
+            self.obs.trace(TR.SUBMIT, rid=rid, prompt_len=int(pnp.shape[0]),
+                           max_new=max_new, seed=req.seed)
         return rid
 
     # -- slot management -----------------------------------------------
@@ -422,6 +566,9 @@ class BatchScheduler:
             self.stats.prefill_tokens += n_ctx
             self.stats.admissions += 1
             admitted += 1
+            if self.obs is not None:
+                self.obs.trace(TR.ADMIT, rid=req.rid, slot=slot,
+                               prefill_tokens=n_ctx, mode="dense")
         self.stats.peak_active_slots = max(
             self.stats.peak_active_slots,
             sum(r is not None for r in self._slot_req))
@@ -557,6 +704,10 @@ class BatchScheduler:
             self.stats.prefix_hits += len(hits) + (partial_pid is not None)
             self.stats.admissions += 1
             admitted += 1
+            if self.obs is not None:
+                self.obs.trace(TR.ADMIT, rid=req.rid, slot=slot, mode="paged",
+                               prefix_hit_tokens=cursor,
+                               reserved_pages=needed)
         self.stats.peak_active_slots = max(
             self.stats.peak_active_slots,
             sum(r is not None for r in self._slot_req))
@@ -596,6 +747,9 @@ class BatchScheduler:
         slot = self.slot_of(rid)
         if slot is not None:
             req = self._slot_req[slot]
+            if self.obs is not None:
+                self.obs.trace(TR.PREEMPT, rid=rid, slot=slot,
+                               streamed=len(self.outputs.get(rid, ())))
             self.evict(slot)
             self.outputs.pop(rid, None)
             return req
@@ -616,8 +770,11 @@ class BatchScheduler:
         use-after-evict / double-free guard."""
         req = self._slot_req[slot]
         if req is None:
+            self._on_guard(f"evict of unoccupied slot {slot}")
             raise ValueError(f"evict of unoccupied slot {slot} "
                              "(double-evict or use-after-evict)")
+        if self.obs is not None:
+            self.obs.trace(TR.EVICT, rid=req.rid, slot=slot, requeue=requeue)
         if requeue:
             self._queue.appendleft(req)
             self.outputs.pop(req.rid, None)
@@ -672,26 +829,36 @@ class BatchScheduler:
         self.admit()
         if not any(r is not None for r in self._slot_req):
             return 0
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: durations must survive NTP
         logits, self.state, act = self._decode(self.params, self.state)
         nxt = np.asarray(self.state.tokens)  # syncs the step
-        step_s = time.time() - t0
+        step_s = time.perf_counter() - t0
         self.stats.decode_s += step_s
         self.stats.decode_steps += 1
         act = np.asarray(act)
+        obs = self.obs
         decoded = 0
         for slot in range(self.slots):
             req = self._slot_req[slot]
             if req is None:
                 continue
-            self.outputs[req.rid].append(int(nxt[slot]))
+            out = self.outputs[req.rid]
+            out.append(int(nxt[slot]))
             decoded += 1
+            if obs is not None:
+                obs.trace(TR.FIRST_TOKEN if len(out) == 1 else TR.DECODE,
+                          rid=req.rid, slot=slot, token=int(nxt[slot]),
+                          pos=len(out))
             self._book_position(req.rid, float(act[slot]))
             self._remaining[slot] -= 1
             if self._remaining[slot] == 0:
+                if obs is not None:
+                    obs.trace(TR.FINISH, rid=req.rid, slot=slot,
+                              tokens=len(out))
                 self.evict(slot)
         self.stats.decoded_tokens += decoded
         self._advance_device_clock(step_s)
+        self._obs_step(step_s, decoded)
         return decoded
 
     def _step_paged(self) -> int:
@@ -741,16 +908,17 @@ class BatchScheduler:
                 feed_tok[slot] = req.prompt_np[-1]
                 feed_seed[slot] = req.seed
                 feed_mask[slot] = True
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: durations must survive NTP
         logits, self.state, act = self._decode(
             self.params, self.state, jnp.asarray(feed_tok),
             jnp.asarray(feed_seed), jnp.asarray(feed_mask),
             jnp.asarray(write_pids))
         nxt = np.asarray(self.state.tokens)  # syncs the step
-        step_s = time.time() - t0
+        step_s = time.perf_counter() - t0
         self.stats.decode_s += step_s
         self.stats.decode_steps += 1
         act = np.asarray(act)
+        obs = self.obs
         decoded = 0
         for slot in range(b):
             req = self._slot_req[slot]
@@ -762,6 +930,9 @@ class BatchScheduler:
                 self._cursor[slot] += 1
                 cur = self._cursor[slot]
                 self.stats.prefill_tokens += 1
+                if obs is not None:
+                    obs.trace(TR.PREFILL_CHUNK, rid=req.rid, slot=slot,
+                              pos=cur, n_ctx=req.n_ctx)
                 if cur % self.page_len == 0:  # completed block: publish it
                     self._register_prefix(slot, cur)
                 if cur == req.n_ctx:
@@ -769,19 +940,28 @@ class BatchScheduler:
                         self._register_prefix(slot, req.n_ctx)
                     self._phase[slot] = HANDOFF
             else:
-                self.outputs[req.rid].append(int(nxt[slot]))
+                out = self.outputs[req.rid]
+                out.append(int(nxt[slot]))
                 decoded += 1
+                if obs is not None:
+                    obs.trace(TR.FIRST_TOKEN if len(out) == 1 else TR.DECODE,
+                              rid=req.rid, slot=slot, token=int(nxt[slot]),
+                              pos=len(out))
                 if phase == HANDOFF:
                     self._phase[slot] = DECODE
                 self._remaining[slot] -= 1
             self._book_position(req.rid, float(act[slot]))
             if self._remaining[slot] == 0:
+                if obs is not None:
+                    obs.trace(TR.FINISH, rid=req.rid, slot=slot,
+                              tokens=len(self.outputs[req.rid]))
                 self.evict(slot)
         self.stats.decoded_tokens += decoded
         self.stats.pages_in_use_peak = max(self.stats.pages_in_use_peak,
                                            self.pages.peak_in_use)
         self.stats.cow_copies = self.pages.cow_copies
         self._advance_device_clock(step_s)
+        self._obs_step(step_s, decoded)
         return decoded
 
     def _advance_device_clock(self, step_wall_s: float) -> None:
@@ -819,12 +999,23 @@ class BatchScheduler:
                 AD.recalibrate_tree_jit(self.params, pol.cfg))
             self._last_recal = self._t_device
             self.stats.recalibrations += 1
+            if self.obs is not None:
+                # one host read per recal event (rare): the post-recal gain
+                # is *the* signal that GDC actually repaired the drift
+                gain = AD.gdc_gain_summary(self.params)
+                self._g_gain.set(gain)
+                self.obs.trace(TR.GDC_RECAL, t_device_s=self._t_device,
+                               gain=gain, n=self.stats.recalibrations)
         self.stats.t_device_s = self._t_device
+        if self.obs is not None:
+            self._g_clock.set(self._t_device)
 
     def run(self) -> Dict[int, List[int]]:
         """Serve until the queue and all slots drain; returns outputs."""
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: wall_s is a duration
         while self._queue or any(r is not None for r in self._slot_req):
             self.step()
-        self.stats.wall_s += time.time() - t0
+        self.stats.wall_s += time.perf_counter() - t0
+        if self.obs is not None and self.obs.profiler is not None:
+            self.obs.profiler.stop()  # close a capture wider than the run
         return self.outputs

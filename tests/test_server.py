@@ -173,6 +173,45 @@ def test_http_stats_and_errors(dense_sched):
     asyncio.run(go())
 
 
+def test_http_metrics_scrape_live(paged_sched):
+    """GET /metrics serves well-formed Prometheus text while SSE streams are
+    in flight, and the scrape never perturbs the token streams (runs on the
+    CI backend matrix)."""
+    sch = paged_sched
+    jobs = [(_prompt(i), 4, 50 + i) for i in range(2)]
+    want = _oracle(sch, jobs)
+
+    async def raw_get(host, port, path):
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(f"GET {path} HTTP/1.1\r\n\r\n".encode())
+        await writer.drain()
+        data = await reader.read()
+        writer.close()
+        return data
+
+    async def go():
+        async with HttpFrontDoor(FrontDoor(sch), port=0) as srv:
+            gens = [asyncio.create_task(
+                _sse_generate(srv.host, srv.port, p, mn, s))
+                for p, mn, s in jobs]
+            live = await raw_get(srv.host, srv.port, "/metrics")
+            got = await asyncio.gather(*gens)
+            done = await raw_get(srv.host, srv.port, "/metrics")
+            return live, done, got
+
+    live, done, got = asyncio.run(go())
+    for data in (live, done):
+        head, _, _body = data.partition(b"\r\n\r\n")
+        assert b"200" in head.split(b"\r\n", 1)[0]
+        assert b"text/plain; version=0.0.4" in head
+    text = done.partition(b"\r\n\r\n")[2].decode()
+    assert "# TYPE xpike_decode_step_seconds histogram" in text
+    assert "xpike_decode_steps_total" in text
+    assert 'xpike_admission_decisions_total{decision="admit"' in text
+    for (toks, _), want_toks in zip(got, want):
+        assert toks == want_toks  # scraping never perturbs the stream
+
+
 # -- energy SLOs: throttle, preempt, re-admit -----------------------------
 
 
